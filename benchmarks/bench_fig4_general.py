@@ -1,0 +1,53 @@
+"""Figure 4a-4d reproduction: Rodinia mixes — throughput, energy, memory
+utilization, turnaround for baseline / scheme A / scheme B."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.mig_a100 import make_backend
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.events import (run_baseline, run_scheme_a,
+                                         run_scheme_b)
+
+from benchmarks.mixes import RODINIA_MIXES, rodinia_mix
+
+#: the paper's headline numbers for context (Fig. 4a): Hm mixes up to 6.2x
+PAPER_NOTES = {
+    "Hm2": "paper: up to 6.2x thpt", "Hm3": "paper: up to 6.2x thpt",
+    "Hm4": "paper: ~1.7x (20GB slice => 2x ceiling)",
+    "Ht1": "paper: A 1.64x / B 1.47x", "Ht2": "paper: A 1.14x / B 1.04x",
+    "Ht3": "paper: A 1.29x / B 1.21x",
+}
+
+
+def run(csv_rows: list) -> None:
+    backend = make_backend()
+    print("\n=== Fig 4a-d: Rodinia mixes (normalized to baseline) ===")
+    print(f"{'mix':<5} {'policy':<10} {'thpt x':>7} {'energy x':>9} "
+          f"{'memutil x':>10} {'turnrnd x':>10}  note")
+    for mix_name in RODINIA_MIXES:
+        t0 = time.perf_counter()
+        base = run_baseline(rodinia_mix(mix_name), backend, A100_POWER)
+        a = run_scheme_a(rodinia_mix(mix_name), backend, A100_POWER,
+                         use_prediction=False)
+        b = run_scheme_b(rodinia_mix(mix_name), backend, A100_POWER,
+                         use_prediction=False)
+        dt = (time.perf_counter() - t0) * 1e6
+        for policy, m in (("scheme_a", a), ("scheme_b", b)):
+            thpt = m.throughput / base.throughput
+            en = base.energy_j / m.energy_j
+            mu = m.mem_util / max(base.mem_util, 1e-9)
+            ta = base.mean_turnaround / max(m.mean_turnaround, 1e-9)
+            note = PAPER_NOTES.get(mix_name, "")
+            print(f"{mix_name:<5} {policy:<10} {thpt:7.2f} {en:9.2f} "
+                  f"{mu:10.2f} {ta:10.2f}  {note}")
+            csv_rows.append((f"fig4_general.{mix_name}.{policy}.thpt_x",
+                             dt / 3, f"{thpt:.3f}"))
+            csv_rows.append((f"fig4_general.{mix_name}.{policy}.energy_x",
+                             dt / 3, f"{en:.3f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)

@@ -1,0 +1,62 @@
+"""Kernel-path microbench: XLA attention vs the Pallas flash kernel
+(interpret mode on CPU — correctness-grade timing, the real comparison runs
+on TPU), plus the SSD chunked scan vs the sequential oracle."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import flash_mha, ssd_mixer
+from repro.kernels.ref import attention_ref, ssd_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv_rows: list) -> None:
+    print("\n=== kernels: CPU-validation timings (us/call) ===")
+    key = jax.random.PRNGKey(0)
+    b, s, h, kh, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, kh, d), jnp.float32)
+    t_ref = _time(lambda: attention_ref(q.transpose(0, 2, 1, 3),
+                                        k.transpose(0, 2, 1, 3),
+                                        v.transpose(0, 2, 1, 3)))
+    t_pallas = _time(lambda: flash_mha(q, k, v, causal=True,
+                                       interpret=True))
+    print(f"attention ref (xla cpu)      {t_ref:12.0f} us")
+    print(f"flash kernel (interpret)     {t_pallas:12.0f} us  "
+          f"(interpret-mode: correctness only)")
+    csv_rows.append(("kernels.attention_ref_us", t_ref, f"s={s}"))
+    csv_rows.append(("kernels.flash_interpret_us", t_pallas, f"s={s}"))
+
+    hh, p, n_state = 4, 32, 16
+    x = jax.random.normal(key, (b, s, hh, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, hh)))
+    a = -jnp.exp(jax.random.normal(key, (hh,)) * 0.2)
+    b_in = jax.random.normal(key, (b, s, n_state)) * 0.3
+    c_in = jax.random.normal(key, (b, s, n_state)) * 0.3
+    t_seq = _time(lambda: ssd_ref(x, dt, a, b_in, c_in)[0])
+    t_chunk = _time(lambda: ssd_chunked(x, dt, a, b_in, c_in, chunk=128)[0])
+    t_kern = _time(lambda: ssd_mixer(x, dt, a, b_in, c_in, chunk=128,
+                                     interpret=True))
+    print(f"ssd sequential oracle        {t_seq:12.0f} us")
+    print(f"ssd chunked (xla)            {t_chunk:12.0f} us  "
+          f"({t_seq / t_chunk:.1f}x vs sequential)")
+    print(f"ssd kernel (interpret)       {t_kern:12.0f} us")
+    csv_rows.append(("kernels.ssd_chunked_us", t_chunk,
+                     f"{t_seq / t_chunk:.2f}x"))
+
+
+if __name__ == "__main__":
+    run([])

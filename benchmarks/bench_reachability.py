@@ -1,0 +1,66 @@
+"""§4.1-4.2 reproduction: the A100 partition FSM — Fig. 3's 19 valid
+configurations, the worked 1g.5gb placement example, Alg. 2 precompute cost
+and Alg. 3 online allocation latency; plus the TPU-pod adaptation's
+closed-form reachability."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.mig_a100 import make_backend as mig_backend
+from repro.core.partition_state import enumerate_states
+from repro.core.reachability import (fully_configured_states,
+                                     precompute_reachability)
+from repro.core.partition_manager import PartitionManager
+from repro.core.tpu_slices import make_backend as tpu_backend, f_configs
+
+
+def run(csv_rows: list) -> None:
+    print("\n=== §4.2: partition state machine ===")
+    a100 = mig_backend()
+    t0 = time.perf_counter()
+    states = enumerate_states(a100)
+    finals = fully_configured_states(a100)
+    fcr = precompute_reachability(a100)
+    t_pre = (time.perf_counter() - t0) * 1e6
+    print(f"A100: |S|={len(states)} valid states, |F|={len(finals)} fully "
+          f"configured (paper Fig. 3: 19), precompute={t_pre / 1e3:.1f}ms")
+    csv_rows.append(("fsm.a100.n_fully_configured", t_pre, str(len(finals))))
+
+    # the paper's worked example: first 1g.5gb placement
+    p1g = a100._by_name["1g.5gb"]
+    print("placing the first 1g.5gb (paper §4.2 example — last slice wins):")
+    for pl in a100.enumerate_placements(a100.initial_state(), p1g):
+        print(f"  gpc slice {pl.handle[0]}: future-config reachability "
+              f"{fcr[pl.next_state]}")
+
+    # Alg. 3 online allocation latency
+    pm = PartitionManager(a100)
+    t0 = time.perf_counter()
+    n = 0
+    for prof in (a100.profiles[0],) * 4 + (a100.tightest_profile(20.0),):
+        if pm.allocate(prof):
+            n += 1
+    t_alloc = (time.perf_counter() - t0) * 1e6 / max(n, 1)
+    print(f"Alg.3 online allocation: {t_alloc:.0f} us/alloc "
+          f"(state: {pm.describe()})")
+    csv_rows.append(("fsm.a100.alloc_us", t_alloc, str(n)))
+
+    tpu = tpu_backend()
+    t0 = time.perf_counter()
+    r0 = tpu.reachability(tpu.initial_state())
+    t_r = (time.perf_counter() - t0) * 1e6
+    print(f"TPU pod (16x16 buddy FSM): |F| = f(0) = {len(str(r0))}-digit "
+          f"count, closed-form eval {t_r:.0f} us "
+          f"(vs ~1.9e45 states — enumeration impossible)")
+    pm = PartitionManager(tpu)
+    t0 = time.perf_counter()
+    allocs = [pm.allocate(tpu.profiles[i % 5]) for i in range(20)]
+    t_alloc = (time.perf_counter() - t0) * 1e6 / 20
+    print(f"TPU Alg.3 allocation: {t_alloc:.0f} us/alloc "
+          f"({sum(bool(a) for a in allocs)}/20 served)")
+    csv_rows.append(("fsm.tpu.alloc_us", t_alloc, "20"))
+
+
+if __name__ == "__main__":
+    run([])

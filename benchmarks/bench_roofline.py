@@ -1,0 +1,49 @@
+"""§Roofline table: reads the dry-run sweep's JSON and prints the
+three-term roofline per (arch x shape x mesh) — deliverable (g)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.analysis import ROOFLINE_HEADER
+# roofline_of lives in dryrun but importing dryrun would force 512 devices;
+# rebuild the row locally instead.
+from repro.launch.analysis import Roofline
+
+DRYRUN_JSON = os.environ.get("DRYRUN_JSON", "experiments/dryrun/dryrun.json")
+
+
+def run(csv_rows: list) -> None:
+    print("\n=== §Roofline (from the multi-pod dry-run) ===")
+    if not os.path.exists(DRYRUN_JSON):
+        print(f"  ({DRYRUN_JSON} not found — run "
+              f"`PYTHONPATH=src python -m repro.launch.dryrun --all` first)")
+        return
+    rows = json.load(open(DRYRUN_JSON))
+    print(ROOFLINE_HEADER)
+    for r in rows:
+        if r.get("skipped"):
+            print(f"SKIP  {r['arch']} x {r['shape']} x {r['mesh']}: "
+                  f"{r['skipped']}")
+            continue
+        if not r["ok"]:
+            print(f"FAIL  {r['arch']} x {r['shape']} x {r['mesh']}")
+            continue
+        roof = Roofline(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                        hlo_flops=r["flops"], hlo_bytes=r["hbm_bytes"],
+                        coll_bytes=(r.get("collectives") or {}).get(
+                            "total", 0),
+                        model_flops=r["model_flops"])
+        print(roof.row() + f"  {r['per_device_bytes'] / 2**30:7.2f} GiB/dev")
+        csv_rows.append((f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+                         r["compile_s"] * 1e6,
+                         roof.dominant))
+    ok = sum(1 for r in rows if r["ok"])
+    sk = sum(1 for r in rows if r.get("skipped"))
+    print(f"\n{ok} lowered+compiled, {sk} skipped (documented), "
+          f"{len(rows) - ok - sk} failed")
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,113 @@
+"""The paper's workload mixes (§5, Appendix A.1 Tables 1-2), reconstructed.
+
+Rodinia mixes Hm1-Hm4 / Ht1-Ht3 and ML mixes Ml1-Ml3 + the four LLM
+dynamic workloads.  LLM trajectories are calibrated to the paper's reported
+OOM iterations (Qwen2: crash at 94 on 10GB, Llama3: 72, FLAN-T5 train: 41,
+FLAN-T5 infer: 27).
+"""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.scheduler.job import (GB, Job, llm_growth_trajectory,
+                                      make_mix, solve_growth_params)
+
+# -- Rodinia (Table 1) -----------------------------------------------------------
+
+RODINIA_MIXES = {
+    # homogeneous
+    "Hm1": [("particlefilter", 50)],
+    "Hm2": [("gaussian", 50)],
+    "Hm3": [("myocyte", 100)],
+    "Hm4": [("euler3d", 50)],
+    # heterogeneous — small:medium:large:full ratios from A.1
+    "Ht1": [("myocyte", 8), ("gaussian", 3), ("srad", 2), ("cfd_full", 2)],
+    "Ht2": [("gaussian", 6), ("euler3d", 6), ("cfd_full", 6)],
+    "Ht3": [("gaussian", 12), ("myocyte", 12), ("euler3d", 6),
+            ("cfd_full", 6)],
+}
+
+
+def rodinia_mix(name: str):
+    jobs = make_mix(RODINIA_MIXES[name])
+    if name.startswith("Ht"):  # paper: heterogeneous mixes are shuffled
+        random.Random(1234).shuffle(jobs)
+    return jobs
+
+
+# -- DNN training jobs (Table 2, estimated via the DNNMem tier) -------------------
+# VGG16 / ResNet50 / InceptionV3 occupy the 20GB slice; BERT fits 5GB with
+# small batch (paper §5.2.1).  Data-transfer heavy (training), which caps
+# the throughput gain below the 7x ceiling — as the paper observes.
+
+_DNN_SPECS = {
+    "bert-small": dict(mem_gb=3.5, t_kernel=4.0, compute_demand=0.50,
+                       t_io=4.0, io_bw_demand=0.55, size_class="small"),
+    "bert-small2": dict(mem_gb=4.7, t_kernel=4.5, compute_demand=0.50,
+                        t_io=4.5, io_bw_demand=0.55, size_class="small"),
+    "vgg16": dict(mem_gb=18.0, t_kernel=10.0, compute_demand=0.55,
+                  t_io=5.0, io_bw_demand=0.50, size_class="large"),
+    "resnet50": dict(mem_gb=16.5, t_kernel=8.0, compute_demand=0.50,
+                     t_io=4.5, io_bw_demand=0.45, size_class="large"),
+    "inceptionv3": dict(mem_gb=17.5, t_kernel=9.0, compute_demand=0.52,
+                        t_io=4.8, io_bw_demand=0.45, size_class="large"),
+}
+
+
+def dnn_job(name: str, idx: int) -> Job:
+    spec = dict(_DNN_SPECS[name])
+    return Job(name=f"{name}:{idx}", est_mem_gb=spec["mem_gb"], **spec)
+
+
+ML_MIXES = {
+    "Ml1": [("bert-small", 4), ("bert-small2", 3), ("vgg16", 3),
+            ("resnet50", 2), ("inceptionv3", 2)],          # 1:0:1:0, 14 jobs
+    "Ml2": [("bert-small", 11), ("bert-small2", 10)],      # 21 small jobs
+    "Ml3": [("vgg16", 6), ("resnet50", 6), ("inceptionv3", 6)],  # 18 large
+}
+
+
+def ml_mix(name: str):
+    return [dnn_job(n, i) for n, c in ML_MIXES[name]
+            for i in range(c)]
+
+
+# -- LLM dynamic workloads (§5.2.2) ------------------------------------------------
+# Calibrated so each workload lands on the 10GB slice first (the paper runs
+# Qwen2 on 10GB and crashes at iteration 94) and the predictor's
+# fire-iteration roughly matches the paper: Qwen2/Llama3 have clean linear
+# growth (fires ~6), FLAN-T5's noisier allocations delay convergence.
+
+LLM_SPECS = {
+    "qwen2":        dict(base_gb=6.0, rate=0.5, oom_gb=10.0, oom_iter=94,
+                         n_iters=120, t=1.2, count=1, noise=0.03, warmup=0),
+    "llama3":       dict(base_gb=6.5, rate=0.6, oom_gb=10.0, oom_iter=72,
+                         n_iters=100, t=1.0, count=1, noise=0.03, warmup=0),
+    # FLAN-T5's memory is flat for the first ~batches, so the predictor has
+    # no trend to extrapolate until growth begins — reproducing the paper's
+    # later convergence (31 of 41, 21 of 27)
+    "flan_t5_train": dict(base_gb=6.0, rate=0.9, oom_gb=10.0, oom_iter=41,
+                          n_iters=60, t=2.0, count=4, noise=0.25, warmup=20),
+    "flan_t5":      dict(base_gb=6.0, rate=1.1, oom_gb=10.0, oom_iter=27,
+                         n_iters=40, t=0.8, count=6, noise=0.20, warmup=12),
+}
+
+
+def llm_job(kind: str, idx: int = 0, seed: int | None = None) -> Job:
+    s = LLM_SPECS[kind]
+    k = solve_growth_params(s["base_gb"], s["oom_gb"],
+                            s["oom_iter"] - s["warmup"], s["rate"])
+    traj = llm_growth_trajectory(
+        s["n_iters"], s["base_gb"], s["rate"], k, t_per_iter=s["t"],
+        noise_gb=s["noise"], warmup_iters=s["warmup"],
+        seed=(seed if seed is not None else idx + 17))
+    # DNNMem-tier starting estimate puts the job on the 10GB slice (paper:
+    # Qwen2 runs on 10GB until the crash / the early restart)
+    return Job(name=f"{kind}:{idx}", mem_gb=traj.peak_phys / GB,
+               t_kernel=0.0, compute_demand=0.55, trajectory=traj,
+               est_mem_gb=s["base_gb"] + 0.5)
+
+
+def llm_mix(kind: str):
+    return [llm_job(kind, i) for i in range(LLM_SPECS[kind]["count"])]

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints each table and a final ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (bench_breakdown, bench_fig4_general, bench_fig4_ml,
+                        bench_kernels, bench_predictor, bench_reachability,
+                        bench_roofline, bench_tpu_pod)
+
+BENCHES = {
+    "fig4_general": bench_fig4_general.run,   # paper Fig. 4a-4d
+    "fig4_ml": bench_fig4_ml.run,             # paper Fig. 4e-4h
+    "predictor": bench_predictor.run,         # paper §5.2.2 table
+    "reachability": bench_reachability.run,   # paper Fig. 3 + §4.2 example
+    "breakdown": bench_breakdown.run,         # paper Tables 3-4
+    "kernels": bench_kernels.run,             # Pallas kernel paths
+    "roofline": bench_roofline.run,           # §Roofline (dry-run derived)
+    "tpu_pod": bench_tpu_pod.run,             # the TPU adaptation, end-to-end
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    rows: list[tuple[str, float, str]] = []
+    failures = []
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(rows)
+        except Exception as e:  # keep the harness running
+            failures.append((name, repr(e)))
+            print(f"\n!! bench {name} failed: {e!r}")
+    print("\n=== CSV ===")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print(f"\n{len(failures)} bench(es) failed: "
+              f"{[f[0] for f in failures]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

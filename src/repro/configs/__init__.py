@@ -1,0 +1,30 @@
+"""Assigned-architecture configs (one module per arch, cited)."""
+from repro.configs.base import ModelConfig, reduce_for_smoke
+
+ARCH_MODULES = {
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    import importlib
+    return importlib.import_module(ARCH_MODULES[arch]).smoke()
+
+
+ALL_ARCHS = list(ARCH_MODULES)

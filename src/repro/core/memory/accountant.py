@@ -1,0 +1,98 @@
+"""Allocator instrumentation — the PyTorch-allocator hook, JAX-side (§3.2.2).
+
+The paper intercepts PyTorch's caching allocator to record every memory
+request.  JAX programs are functional, so the equivalent boundary is the set
+of live buffers a job owns between steps (params, optimizer state, KV caches,
+activations in flight).  :class:`MemoryAccountant` tracks:
+
+* ``requested_bytes``  — cumulative bytes requested this iteration (every
+  tensor materialized, including temporaries the job reports), and
+* ``in_use_bytes``     — peak live bytes this iteration,
+
+and derives ``reuse_ratio = in_use / requested`` exactly as the paper's
+instrumented allocator does.  Jobs (the serving engine, the train loop) call
+:meth:`note_alloc` / :meth:`note_live` per iteration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import jax
+import numpy as np
+
+
+def pytree_nbytes(tree: Any) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def spec_nbytes(tree: Any) -> int:
+    """Bytes for a pytree of ShapeDtypeStructs (no allocation)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+@dataclasses.dataclass
+class IterationStats:
+    iteration: int
+    requested_bytes: float
+    in_use_bytes: float
+
+    @property
+    def reuse_ratio(self) -> float:
+        return self.in_use_bytes / max(self.requested_bytes, 1.0)
+
+
+class MemoryAccountant:
+    """Per-job allocator statistics, one record per workload iteration."""
+
+    def __init__(self) -> None:
+        self.history: list[IterationStats] = []
+        self._iter_requested = 0.0
+        self._iter_peak_live = 0.0
+        self._cum_requested = 0.0
+
+    # -- per-iteration recording ----------------------------------------------
+
+    def note_alloc(self, tree_or_bytes: Any) -> None:
+        """Record a memory request (a pytree of arrays/specs, or raw bytes)."""
+        n = (float(tree_or_bytes) if isinstance(tree_or_bytes, (int, float))
+             else float(pytree_nbytes(tree_or_bytes)))
+        self._iter_requested += n
+
+    def note_live(self, tree_or_bytes: Any) -> None:
+        """Record the current live working set; peak is kept per iteration."""
+        n = (float(tree_or_bytes) if isinstance(tree_or_bytes, (int, float))
+             else float(pytree_nbytes(tree_or_bytes)))
+        self._iter_peak_live = max(self._iter_peak_live, n)
+
+    def end_iteration(self) -> IterationStats:
+        self._cum_requested += self._iter_requested
+        stats = IterationStats(iteration=len(self.history),
+                               requested_bytes=self._cum_requested,
+                               in_use_bytes=self._iter_peak_live)
+        self.history.append(stats)
+        self._iter_requested = 0.0
+        self._iter_peak_live = 0.0
+        return stats
+
+    # -- predictor feed ---------------------------------------------------------
+
+    def series(self) -> tuple[list[float], list[float]]:
+        req = [s.requested_bytes for s in self.history]
+        reuse = [s.reuse_ratio for s in self.history]
+        return req, reuse
+
+    @property
+    def peak_in_use(self) -> float:
+        return max((s.in_use_bytes for s in self.history), default=0.0)

@@ -1,0 +1,120 @@
+"""Dynamic partition manager (paper §4.2, Algorithm 3).
+
+    function ALLOCATE_PARTITION(s, x, fcr)
+        C <- ENUMERATE_PLACEMENTS(s, x)
+        if C = empty: return FAIL
+        s* <- ARGMAX(t in C, fcr[t])
+        return s*
+
+The manager owns the live FSM state, serves tight partitions to the
+schedulers, and implements partition *fusion* and *fission* (scheme B's
+merge/split path).  It is backend-agnostic: A100 MIG or TPU pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Hashable
+
+from repro.core.partition_state import (PartitionBackend, PartitionProfile,
+                                        Placement)
+
+
+@dataclasses.dataclass
+class Partition:
+    """A live partition leased to a job."""
+
+    pid: int
+    profile: PartitionProfile
+    handle: Hashable
+    busy: bool = False
+
+
+class PartitionManager:
+    """Owns the device FSM state; allocation maximizes |F_s| (Alg. 3)."""
+
+    def __init__(self, backend: PartitionBackend) -> None:
+        self.backend = backend
+        self.state: Hashable = backend.initial_state()
+        self.live: dict[int, Partition] = {}
+        self._pid = itertools.count()
+        self.n_reconfigs = 0  # fission/fusion + fresh allocations (metric)
+
+    # -- queries -------------------------------------------------------------
+
+    def idle_partition_with(self, profile: PartitionProfile) -> Partition | None:
+        """An existing idle partition of exactly this profile (tight fit
+        without touching the FSM — scheme B's first preference)."""
+        for part in self.live.values():
+            if not part.busy and part.profile.name == profile.name:
+                return part
+        return None
+
+    def idle_partitions(self) -> list[Partition]:
+        return [p for p in self.live.values() if not p.busy]
+
+    # -- Algorithm 3 -----------------------------------------------------------
+
+    def allocate(self, profile: PartitionProfile) -> Partition | None:
+        """alloc(x): argmax-reachability placement, or None (FAIL)."""
+        placements = self.backend.enumerate_placements(self.state, profile)
+        if not placements:
+            return None
+        best = max(placements, key=lambda pl: self.backend.reachability(
+            pl.next_state))
+        return self._commit(best)
+
+    def _commit(self, placement: Placement) -> Partition:
+        self.state = placement.next_state
+        part = Partition(pid=next(self._pid), profile=placement.profile,
+                         handle=placement.handle)
+        self.live[part.pid] = part
+        self.n_reconfigs += 1
+        return part
+
+    def release(self, part: Partition) -> None:
+        """free(x) — trivial online deallocation (paper §4.2)."""
+        self.state = self.backend.free(self.state, part.handle)
+        del self.live[part.pid]
+
+    # -- fusion / fission (scheme B merge/split, paper §4.3) -------------------
+
+    def allocate_with_reshape(self, profile: PartitionProfile
+                              ) -> Partition | None:
+        """Try plain allocation; failing that, merge/split idle partitions
+        until a ``profile`` placement exists.  Busy partitions are never
+        touched (MIGM never disturbs running jobs — unlike MISO's
+        checkpoint/restore, §6)."""
+        part = self.allocate(profile)
+        if part is not None:
+            return part
+
+        # Fission/fusion: free all idle partitions (merging their space back
+        # into the FSM), retry, then re-create the survivors greedily.  This
+        # realizes "merge neighboring small partitions or split bigger
+        # partitions" in FSM terms: releasing idle space coalesces buddies /
+        # frees GPC spans, and the argmax re-placement splits as needed.
+        idle = self.idle_partitions()
+        if not idle:
+            return None
+        saved = [(p.pid, p.profile) for p in idle]
+        for p in idle:
+            self.release(p)
+        part = self.allocate(profile)
+        if part is None:
+            # roll back: restore the idle partitions (argmax placement again)
+            for _pid, prof in saved:
+                restored = self.allocate(prof)
+                assert restored is not None, "rollback must succeed"
+            return None
+        self.n_reconfigs += len(saved)
+        return part
+
+    # -- reporting -------------------------------------------------------------
+
+    def describe(self) -> str:
+        try:
+            return self.backend.describe(self.state)  # type: ignore[attr-defined]
+        except AttributeError:  # pragma: no cover
+            return repr(self.state)

@@ -1,0 +1,64 @@
+"""Future-configuration reachability (paper §4.2, Algorithm 2).
+
+    function PRECOMPUTE_REACHABILITY
+        Enumerate all valid partition states S.
+        for each valid partition state s:
+            Compute all reachable fully configured states F_s
+            fcr(s) <- |F_s|
+        return fcr
+
+For the A100 backend, S is small (a few hundred states) so we run the
+algorithm literally.  For the TPU buddy backend, |S| is astronomically large;
+:mod:`repro.core.tpu_slices` overrides ``reachability`` with an equivalent
+closed-form product (proved equal to |F_s| in its module docstring) — the
+*metric* is identical, only its evaluation strategy differs.
+"""
+
+from __future__ import annotations
+
+from typing import Hashable
+
+from repro.core.partition_state import (PartitionBackend, enumerate_states,
+                                        saturated)
+
+_CACHE: dict[int, dict[Hashable, int]] = {}
+
+
+def precompute_reachability(backend: PartitionBackend,
+                            max_states: int = 2_000_000
+                            ) -> dict[Hashable, int]:
+    """Algorithm 2 — offline |F_s| for every valid state of ``backend``."""
+    key = id(backend)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    states = enumerate_states(backend, max_states=max_states)
+
+    # Memoized DFS: F_s = {s} if saturated(s); reachable final sets are unions
+    # over successors.  We count *distinct* final states, so propagate sets of
+    # saturated states (frozensets are fine at this scale) with memoization.
+    finals: dict[Hashable, frozenset] = {}
+
+    def final_set(state: Hashable) -> frozenset:
+        if state in finals:
+            return finals[state]
+        acc: set = set()
+        is_final = True
+        for profile in backend.profiles:
+            for placement in backend.enumerate_placements(state, profile):
+                is_final = False
+                acc |= final_set(placement.next_state)
+        if is_final:
+            acc = {state}
+        out = frozenset(acc)
+        finals[state] = out
+        return out
+
+    fcr = {s: len(final_set(s)) for s in states}
+    _CACHE[key] = fcr
+    return fcr
+
+
+def fully_configured_states(backend: PartitionBackend) -> list[Hashable]:
+    """F — all saturated states (paper Fig. 3 rows for the A100)."""
+    return [s for s in enumerate_states(backend) if saturated(backend, s)]

@@ -1,0 +1,59 @@
+"""Device power/energy model (paper §5 polls nvidia-smi at 0.1s; here the
+discrete-event simulator integrates the same quantity analytically).
+
+    P(t) = P_idle + (P_peak - P_idle) * sum_j min(c_j, demand_j)
+
+where the sum runs over jobs active at time t, ``c_j`` is the compute
+fraction of job j's slice and ``demand_j`` its usable parallelism — idle
+slices burn no dynamic power but the device's idle floor is always paid,
+which is exactly why shorter makespans save energy (the paper's observation
+that energy tracks throughput).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePowerModel:
+    name: str
+    p_idle_w: float
+    p_peak_w: float
+
+    def power(self, active_compute_fraction: float) -> float:
+        u = min(max(active_compute_fraction, 0.0), 1.0)
+        return self.p_idle_w + (self.p_peak_w - self.p_idle_w) * u
+
+
+#: A100 40GB PCIe: 250W TDP, ~55W idle (measured ranges in the literature).
+A100_POWER = DevicePowerModel("a100-40gb-pcie", p_idle_w=55.0, p_peak_w=250.0)
+
+#: One v5e chip: ~200W peak, ~65W idle; a pod-slice model scales by chips.
+V5E_CHIP_POWER = DevicePowerModel("tpu-v5e-chip", p_idle_w=65.0, p_peak_w=200.0)
+
+
+def pod_power_model(n_chips: int = 256) -> DevicePowerModel:
+    return DevicePowerModel(
+        f"tpu-v5e-pod-{n_chips}",
+        p_idle_w=V5E_CHIP_POWER.p_idle_w * n_chips,
+        p_peak_w=V5E_CHIP_POWER.p_peak_w * n_chips)
+
+
+class EnergyIntegrator:
+    """Piecewise-constant power integration over the event timeline."""
+
+    def __init__(self, model: DevicePowerModel) -> None:
+        self.model = model
+        self._t = 0.0
+        self._active = 0.0
+        self.joules = 0.0
+
+    def advance(self, t: float, active_compute_fraction: float) -> None:
+        """Integrate up to ``t`` with the *previous* utilization, then switch
+        to the new utilization."""
+        if t < self._t - 1e-9:
+            raise ValueError(f"time went backwards: {t} < {self._t}")
+        self.joules += self.model.power(self._active) * (t - self._t)
+        self._t = t
+        self._active = active_compute_fraction

@@ -1,0 +1,469 @@
+"""Discrete-event cluster simulator + the paper's scheduling policies.
+
+The paper evaluates on a real A100 polled via nvidia-smi; this module is the
+same experiment as a deterministic discrete-event simulation so the entire
+policy space (baseline / scheme A / scheme B, each with and without the
+time-series predictor) can be evaluated reproducibly on CPU.  The *policies*
+are the paper's Algorithms 4 and 5 verbatim; the device model (runtime
+stretch, IO contention, power) is calibrated to the paper's Tables 3-4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Iterable
+
+from repro.core.partition_manager import Partition, PartitionManager
+from repro.core.partition_state import PartitionBackend, PartitionProfile
+from repro.core.scheduler.energy import DevicePowerModel, EnergyIntegrator
+from repro.core.scheduler.job import GB, Job
+from repro.core.memory.timeseries import PeakMemoryPredictor
+
+DONE = "done"
+OOM = "oom"
+EARLY_RESTART = "early_restart"
+
+#: time to create/destroy a MIG instance (nvidia-smi mig operations are
+#: hundreds of ms) — the cost scheme A's group batching amortizes and
+#: scheme B pays per reconfiguration (paper §4.3: A "minimizes the number
+#: of dynamic reconfigurations").
+RECONFIG_COST_S = 0.3
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    duration: float
+    outcome: str
+    new_est_mem_gb: float | None = None   # updated estimate on oom/early
+    iterations_run: int = 0
+    wasted_seconds: float = 0.0
+
+
+def plan_execution(job: Job, profile: PartitionProfile, io_stretch: float,
+                   use_prediction: bool,
+                   backend: PartitionBackend) -> ExecutionPlan:
+    """Decide how a run of ``job`` on ``profile`` terminates."""
+    c = profile.compute_fraction
+    part_bytes = profile.mem_gb * GB
+
+    if not job.is_dynamic:
+        full = job.runtime_on(c, io_stretch)
+        if job.mem_gb > profile.mem_gb:
+            # static job with an under-estimate: OOM once allocation happens
+            fail_at = job.t_fixed + 0.1 * (full - job.t_fixed)
+            bigger = backend.next_larger_profile(profile)
+            new_est = bigger.mem_gb if bigger else job.mem_gb
+            return ExecutionPlan(duration=fail_at, outcome=OOM,
+                                 new_est_mem_gb=new_est,
+                                 wasted_seconds=fail_at)
+        return ExecutionPlan(duration=full, outcome=DONE)
+
+    traj = job.trajectory
+    stretch = max(1.0, job.compute_demand / max(c, 1e-6))
+    t_iter = traj.t_per_iter * stretch
+    oom_it = traj.oom_iteration(part_bytes)
+
+    if use_prediction:
+        predictor = PeakMemoryPredictor(max_iter=traj.n_iters)
+        for i, (m, r) in enumerate(zip(traj.req_mem, traj.reuse_ratio)):
+            pred = predictor.observe(m, r)
+            if predictor.will_oom(part_bytes, pred):
+                # early restart BEFORE the crash (paper §2.3/§5.2.2)
+                dur = job.t_fixed + (i + 1) * t_iter
+                return ExecutionPlan(
+                    duration=dur, outcome=EARLY_RESTART,
+                    new_est_mem_gb=pred.peak_mem_bytes / GB,
+                    iterations_run=i + 1, wasted_seconds=dur)
+            if oom_it is not None and i >= oom_it:
+                break  # crash arrives before the predictor fires
+
+    if oom_it is not None:
+        dur = job.t_fixed + (oom_it + 1) * t_iter
+        bigger = backend.next_larger_profile(profile)
+        new_est = bigger.mem_gb if bigger else traj.peak_phys / GB
+        return ExecutionPlan(duration=dur, outcome=OOM,
+                             new_est_mem_gb=new_est,
+                             iterations_run=oom_it + 1, wasted_seconds=dur)
+    return ExecutionPlan(duration=job.t_fixed + traj.n_iters * t_iter,
+                         outcome=DONE, iterations_run=traj.n_iters)
+
+
+@dataclasses.dataclass
+class RunRecord:
+    job: str
+    profile: str
+    start: float
+    end: float
+    outcome: str
+    compute_fraction: float
+    mem_gb: float
+    wasted_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class Metrics:
+    policy: str
+    n_jobs: int
+    makespan: float
+    energy_j: float
+    mem_util: float            # time-averaged used-mem / device-mem
+    mean_turnaround: float
+    n_oom: int
+    n_early_restarts: int
+    n_reconfigs: int
+    wasted_seconds: float
+    records: list[RunRecord]
+
+    @property
+    def throughput(self) -> float:
+        return self.n_jobs / max(self.makespan, 1e-9)
+
+    @property
+    def energy_per_job(self) -> float:
+        return self.energy_j / max(self.n_jobs, 1)
+
+    def summary(self) -> str:
+        return (f"{self.policy}: jobs={self.n_jobs} makespan={self.makespan:.1f}s "
+                f"thpt={self.throughput:.4f}/s energy={self.energy_j / 1e3:.1f}kJ "
+                f"mem_util={self.mem_util:.2%} turnaround={self.mean_turnaround:.1f}s "
+                f"oom={self.n_oom} early={self.n_early_restarts} "
+                f"reconf={self.n_reconfigs}")
+
+
+@dataclasses.dataclass(order=True)
+class _Running:
+    t_end: float
+    seq: int
+    job: Job = dataclasses.field(compare=False)
+    partition: Partition = dataclasses.field(compare=False)
+    plan: ExecutionPlan = dataclasses.field(compare=False)
+    t_start: float = dataclasses.field(compare=False, default=0.0)
+    avg_util: float = dataclasses.field(compare=False, default=0.0)
+
+
+class ClusterSim:
+    """Shared machinery: time, running set, energy + memory integrals."""
+
+    def __init__(self, backend: PartitionBackend, power: DevicePowerModel,
+                 use_prediction: bool = True, policy: str = "") -> None:
+        self.backend = backend
+        self.pm = PartitionManager(backend)
+        self.energy = EnergyIntegrator(power)
+        self.use_prediction = use_prediction
+        self.policy = policy
+        self.t = 0.0
+        self._heap: list[_Running] = []
+        self._seq = itertools.count()
+        self.records: list[RunRecord] = []
+        self.finished: dict[str, float] = {}
+        self.n_oom = 0
+        self.n_early = 0
+        self.wasted = 0.0
+        self._mem_integral = 0.0
+        self._live_mem_gb = 0.0
+
+    # -- integrals ---------------------------------------------------------
+
+    def _advance_time(self, t: float) -> None:
+        self._mem_integral += self._live_mem_gb * (t - self.t)
+        self.energy.advance(t, self._active_compute())
+        self.t = t
+
+    def _active_compute(self) -> float:
+        # Dynamic power is charged over *kernel* time, not IO-wait time —
+        # each run contributes its time-averaged utilization so total dynamic
+        # energy is work-conserving across schedulers; energy differences
+        # then come from the idle floor x makespan (paper: energy tracks
+        # throughput).
+        return sum(r.avg_util for r in self._heap)
+
+    def _io_stretch(self) -> float:
+        demand = sum(r.job.io_bw_demand for r in self._heap)
+        return max(1.0, demand)
+
+    # -- run control ---------------------------------------------------------
+
+    def start(self, job: Job, partition: Partition,
+              setup_s: float = 0.0) -> _Running:
+        io_stretch = max(1.0, self._io_stretch() + job.io_bw_demand)
+        plan = plan_execution(job, partition.profile, io_stretch,
+                              self.use_prediction, self.backend)
+        plan.duration += setup_s  # partition-creation latency, if any
+        partition.busy = True
+        c = partition.profile.compute_fraction
+        busy_util = min(c, job.compute_demand)
+        if job.is_dynamic:
+            avg_util = busy_util  # iterative decode/train: compute-bound
+        else:
+            avg_util = busy_util * (job.kernel_seconds_on(c)
+                                    / max(plan.duration, 1e-9))
+        run = _Running(t_end=self.t + plan.duration, seq=next(self._seq),
+                       job=job, partition=partition, plan=plan,
+                       t_start=self.t, avg_util=avg_util)
+        # re-integrate with the new running set
+        self._advance_time(self.t)
+        heapq.heappush(self._heap, run)
+        self._live_mem_gb += min(job.mem_gb, partition.profile.mem_gb)
+        self.energy.advance(self.t, self._active_compute())
+        return run
+
+    def pop_next_finish(self) -> _Running:
+        run = heapq.heappop(self._heap)
+        # integrate the interval [self.t, run.t_end] *including* this run
+        self._mem_integral += self._live_mem_gb * (run.t_end - self.t)
+        self.energy.advance(run.t_end, self._active_compute())
+        self.t = run.t_end
+        self._live_mem_gb -= min(run.job.mem_gb,
+                                 run.partition.profile.mem_gb)
+        run.partition.busy = False
+        self.records.append(RunRecord(
+            job=run.job.name, profile=run.partition.profile.name,
+            start=run.t_start, end=run.t_end, outcome=run.plan.outcome,
+            compute_fraction=run.partition.profile.compute_fraction,
+            mem_gb=run.job.mem_gb, wasted_seconds=run.plan.wasted_seconds))
+        if run.plan.outcome == OOM:
+            self.n_oom += 1
+            self.wasted += run.plan.wasted_seconds
+        elif run.plan.outcome == EARLY_RESTART:
+            self.n_early += 1
+            self.wasted += run.plan.wasted_seconds
+        else:
+            self.finished[run.job.name] = run.t_end
+        return run
+
+    @property
+    def has_running(self) -> bool:
+        return bool(self._heap)
+
+    @property
+    def next_finish_time(self) -> float | None:
+        return self._heap[0].t_end if self._heap else None
+
+    def advance_to(self, t: float) -> None:
+        """Idle until ``t`` (online mode: waiting for the next arrival)."""
+        if t > self.t:
+            self._advance_time(t)
+
+    def metrics(self, n_jobs: int) -> Metrics:
+        makespan = max(self.t, 1e-9)
+        return Metrics(
+            policy=self.policy, n_jobs=n_jobs, makespan=makespan,
+            energy_j=self.energy.joules,
+            mem_util=self._mem_integral / (makespan
+                                           * self.backend.total_mem_gb()),
+            mean_turnaround=(sum(self.finished.values())
+                             / max(len(self.finished), 1)),
+            n_oom=self.n_oom, n_early_restarts=self.n_early,
+            n_reconfigs=self.pm.n_reconfigs, wasted_seconds=self.wasted,
+            records=self.records)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+def _tight_profile(backend: PartitionBackend, job: Job) -> PartitionProfile:
+    est = job.est_mem_gb
+    if est is None:
+        # unknown memory: start on the smallest partition (paper §2.2)
+        return backend.profiles[0]
+    prof = backend.tightest_profile(est, compute=0.0)
+    if prof is None:
+        prof = backend.profiles[-1]
+    return prof
+
+
+def run_baseline(jobs: Iterable[Job], backend: PartitionBackend,
+                 power: DevicePowerModel) -> Metrics:
+    """The paper's baseline: a non-partitioned device runs the batch
+    sequentially (§5: 'the batch executing sequentially on the GPU')."""
+    jobs = list(jobs)
+    sim = ClusterSim(backend, power, use_prediction=False, policy="baseline")
+    full = backend.profiles[-1]
+    for job in jobs:
+        part = sim.pm.allocate(full)
+        assert part is not None
+        sim.start(job, part)
+        sim.pop_next_finish()
+        sim.pm.release(part)
+    return sim.metrics(len(jobs))
+
+
+def run_scheme_a(jobs: Iterable[Job], backend: PartitionBackend,
+                 power: DevicePowerModel, use_prediction: bool = True,
+                 work_steal: bool = False) -> Metrics:
+    """Algorithm 4 — SCHEDULE_BY_GROUP: sort by MIG group, configure
+    homogeneous slices per group, schedule the group, reconfigure, repeat.
+
+    ``work_steal=False`` reproduces the paper's static equal division of a
+    group across its partitions (the Ml3 corner case); ``True`` is the
+    beyond-paper fix (pull-based dispatch).
+    """
+    jobs = list(jobs)
+    sim = ClusterSim(backend, power, use_prediction, policy="scheme_a"
+                     + ("+pred" if use_prediction else "")
+                     + ("+steal" if work_steal else ""))
+
+    # SORTED_BY_MIG_GROUP: map each job to its tightest profile, group by it
+    groups: dict[str, list[Job]] = {}
+    for job in jobs:
+        groups.setdefault(_tight_profile(backend, job).name, []).append(job)
+    order = sorted(groups, key=lambda n: next(
+        p.mem_gb for p in backend.profiles if p.name == n))
+    pending_larger: list[Job] = []  # OOM/early-restart spill into later groups
+
+    gi = 0
+    while gi < len(order) or pending_larger:
+        if gi < len(order):
+            pname = order[gi]
+            group = groups[pname]
+            gi += 1
+        else:
+            # leftover restarts larger than every original group
+            group = pending_larger
+            pending_larger = []
+            pname = _tight_profile(backend, group[0]).name
+        # pull in restarts that now fit this group's profile
+        profile = next(p for p in backend.profiles if p.name == pname)
+        still_larger = []
+        for j in pending_larger:
+            if _tight_profile(backend, j).name == pname:
+                group.append(j)
+            else:
+                still_larger.append(j)
+        pending_larger = still_larger
+
+        # SET_HOMOGENEOUS_SLICES: carve as many slices of this memory size
+        # as possible, preferring the compute-maximal profile first — on the
+        # A100 this yields 4g.20gb + 3g.20gb (the paper's §5.2.1 pair whose
+        # 4/7 vs 3/7 compute asymmetry causes the Ml3 corner case).
+        same_mem = sorted(
+            [p for p in backend.profiles if p.mem_gb == profile.mem_gb],
+            key=lambda p: -p.compute_fraction)
+        parts: list[Partition] = []
+        while True:
+            part = None
+            for prof_try in same_mem:
+                part = sim.pm.allocate(prof_try)
+                if part is not None:
+                    break
+            if part is None:
+                break
+            parts.append(part)
+        assert parts, f"cannot create any {profile.name} partition"
+
+        # SCHEDULE(group)
+        setup = RECONFIG_COST_S
+        if work_steal:
+            queue = list(group)
+            for part in parts:
+                if queue:
+                    sim.start(queue.pop(0), part, setup_s=setup)
+                    setup = 0.0
+            while sim.has_running:
+                run = sim.pop_next_finish()
+                if run.plan.outcome in (OOM, EARLY_RESTART):
+                    run.job.est_mem_gb = run.plan.new_est_mem_gb
+                    pending_larger.append(run.job)
+                if queue:
+                    sim.start(queue.pop(0), run.partition)
+        else:
+            # paper-faithful: equal static division across partitions
+            queues: list[list[Job]] = [[] for _ in parts]
+            for i, j in enumerate(group):
+                queues[i % len(parts)].append(j)
+            by_part = {p.pid: q for p, q in zip(parts, queues)}
+            for part in parts:
+                if by_part[part.pid]:
+                    sim.start(by_part[part.pid].pop(0), part,
+                              setup_s=setup)
+                    setup = 0.0
+            while sim.has_running:
+                run = sim.pop_next_finish()
+                if run.plan.outcome in (OOM, EARLY_RESTART):
+                    run.job.est_mem_gb = run.plan.new_est_mem_gb
+                    pending_larger.append(run.job)
+                q = by_part[run.partition.pid]
+                if q:
+                    sim.start(q.pop(0), run.partition)
+
+        for part in parts:
+            sim.pm.release(part)
+
+    return sim.metrics(len(jobs))
+
+
+def run_scheme_b(jobs: Iterable[Job], backend: PartitionBackend,
+                 power: DevicePowerModel, use_prediction: bool = True
+                 ) -> Metrics:
+    """Algorithm 5 — SCHEDULE_DYN_RECONFIG: FIFO order; tight idle partition,
+    else create, else merge/split (fusion/fission), else SLEEP until a
+    running job finishes.
+
+    Supports ONLINE arrivals: jobs with ``arrival > 0`` join the queue when
+    their time comes (the paper's "scheduler receives incoming workloads");
+    a batch is simply the all-arrive-at-zero special case."""
+    jobs = list(jobs)
+    sim = ClusterSim(backend, power, use_prediction, policy="scheme_b"
+                     + ("+pred" if use_prediction else ""))
+    pending: list[Job] = sorted([j for j in jobs if j.arrival > 0],
+                                key=lambda j: j.arrival)
+    queue: list[Job] = [j for j in jobs if j.arrival <= 0]
+
+    while queue or sim.has_running or pending:
+        # admit arrivals whose time has come
+        while pending and pending[0].arrival <= sim.t:
+            queue.append(pending.pop(0))
+        if not queue and not sim.has_running and pending:
+            sim.advance_to(pending[0].arrival)
+            continue
+        scheduled_any = False
+        while queue:
+            job = queue[0]
+            # compute is a soft constraint (§4.3): prefer the profile that
+            # also covers the job's parallelism (4g.20gb over 3g.20gb for a
+            # half-GPU DNN), fall back to memory-only tightness
+            candidates = []
+            if job.est_mem_gb is not None:
+                strong = backend.tightest_profile(job.est_mem_gb,
+                                                  job.compute_demand)
+                if strong is not None:
+                    candidates.append(strong)
+            weak = _tight_profile(backend, job)
+            if weak.name not in [c.name for c in candidates]:
+                candidates.append(weak)
+            part, setup = None, RECONFIG_COST_S
+            for profile in candidates:
+                idle = sim.pm.idle_partition_with(profile)
+                if idle is not None:
+                    part, setup = idle, 0.0
+                    break
+            if part is None:
+                for profile in candidates:
+                    part = (sim.pm.allocate(profile)
+                            or sim.pm.allocate_with_reshape(profile))
+                    if part is not None:
+                        break
+            if part is None:
+                break  # SLEEP: wait for a finish event
+            queue.pop(0)
+            sim.start(job, part, setup_s=setup)
+            scheduled_any = True
+        if not sim.has_running:
+            if queue and not scheduled_any:
+                raise RuntimeError(
+                    f"deadlock: cannot place {queue[0].name} "
+                    f"(est {queue[0].est_mem_gb}GB) on an empty device")
+            continue
+        # wake at whichever comes first: a finish or the next arrival
+        if pending and pending[0].arrival < (sim.next_finish_time or 1e30):
+            sim.advance_to(pending[0].arrival)
+            continue
+        run = sim.pop_next_finish()
+        if run.plan.outcome in (OOM, EARLY_RESTART):
+            run.job.est_mem_gb = run.plan.new_est_mem_gb
+            queue.insert(0, run.job)  # back of... front: it arrived earliest
+
+    return sim.metrics(len(jobs))

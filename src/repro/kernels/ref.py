@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None
+                  ) -> jax.Array:
+    """q: [B,H,Sq,D]; k/v: [B,KH,Sk,D].  Direct softmax attention."""
+    b, h, sq, d = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32))
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+            c_in: jax.Array, state0: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Sequential (non-chunked) SSD recurrence — the exact oracle.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (negative);
+    b_in/c_in: [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, xs):
+        xt, dtt, bt, ct = xs   # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a)                       # [B,H]
+        inject = jnp.einsum("bhp,bn->bhpn",
+                            dtt[..., None] * xt.astype(jnp.float32),
+                            bt.astype(jnp.float32))
+        state = state * decay[..., None, None] + inject
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2).astype(jnp.float32),
+          b_in.transpose(1, 0, 2), c_in.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,217 @@
+"""Optimized-HLO static analyzer.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a `while` body
+(every ``lax.scan``: layer stacks, microbatch accumulation, q-block
+attention, SSD chunks) is counted a single time regardless of trip count,
+which under-counts a 62-layer scanned model by ~62x.  This module parses
+``compiled.as_text()`` instead and aggregates
+
+* dot FLOPs (operand shapes resolved through a per-computation symbol
+  table, contraction dims from ``lhs_contracting_dims``),
+* collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute result bytes),
+* per-op output bytes (an HBM-traffic proxy),
+
+each multiplied by the product of enclosing while-loop trip counts.  Trip
+counts come from XLA's own ``backend_config={"known_trip_count":{"n":...}}``
+annotation.  Fusion/call/conditional sub-computations inherit the caller's
+multiplicity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_RESULT_RE = re.compile(r"^(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_DOT_OPERANDS_RE = re.compile(r"\bdot\((%[\w\.\-]+),\s*(%[\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_WHILE_RE = re.compile(r"\bwhile\(.*?body=(%[\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count.*?\"n\":\"(\d+)\"")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=(%[\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _parse_shape(type_str: str) -> tuple[list[int], int] | None:
+    """'f32[2,4096,512]{...}' -> (dims, bytes); None for tuples/tokens."""
+    m = _SHAPE_RE.match(type_str.strip().lstrip("("))
+    if not m:
+        return None
+    dt, dims_s = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in dims_s.split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    out_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    children: list = dataclasses.field(default_factory=list)  # (callee, mult)
+
+
+def split_computations(text: str) -> dict[str, list[str]]:
+    """Split the module dump into {computation_name: body lines}."""
+    comps: dict[str, list[str]] = {}
+    cur_name = None
+    cur_lines: list[str] = []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur_name is None:
+            if stripped.endswith("{") and ") -> " in stripped and (
+                    stripped.startswith("%") or stripped.startswith("ENTRY")):
+                name = stripped.split("(")[0].strip()
+                name = name.replace("ENTRY", "").strip().lstrip("%")
+                cur_name = name
+                cur_lines = []
+            continue
+        if stripped.startswith("}"):  # computations are not nested in dumps
+            comps[cur_name] = cur_lines
+            cur_name = None
+            continue
+        cur_lines.append(stripped)
+    if cur_name is not None:
+        comps[cur_name] = cur_lines
+    return comps
+
+
+def _analyze_computation(name: str, lines: list[str]) -> Computation:
+    comp = Computation(name=name)
+    symbols: dict[str, list[int]] = {}
+    for line in lines:
+        m = _RESULT_RE.match(line)
+        if not m:
+            continue
+        lhs, rhs = m.group(1), m.group(2)
+        parsed = _parse_shape(rhs)
+        if parsed:
+            symbols[lhs] = parsed[0]
+            comp.out_bytes += parsed[1]
+    for line in lines:
+        wm = _WHILE_RE.search(line)
+        if wm:
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            comp.children.append((wm.group(1).lstrip("%"), trip))
+            continue
+        if " dot(" in line:
+            dm = _DOT_OPERANDS_RE.search(line)
+            m = _RESULT_RE.match(line)
+            if dm and m:
+                res = _parse_shape(m.group(2))
+                lhs_dims = symbols.get(dm.group(1))
+                cm = _CONTRACT_RE.search(line)
+                if res and lhs_dims is not None:
+                    res_dims, res_bytes = res
+                    res_elems = 1
+                    for d in res_dims:
+                        res_elems *= d
+                    k = 1
+                    if cm:
+                        for c in (int(x) for x in cm.group(1).split(",")
+                                  if x):
+                            if c < len(lhs_dims):
+                                k *= lhs_dims[c]
+                    else:
+                        k = lhs_dims[-1] if lhs_dims else 1
+                    comp.flops += 2.0 * res_elems * k
+            continue
+        matched_coll = None
+        for coll in _COLLECTIVES:
+            if re.search(rf"\b{coll}(-start)?\(", line):
+                matched_coll = coll
+                break
+        if matched_coll:
+            m = _RESULT_RE.match(line)
+            if m:
+                parsed = _parse_shape(m.group(2))
+                if parsed:
+                    comp.coll_bytes[matched_coll] += parsed[1]
+                else:  # tuple result (e.g. all-gather of several operands)
+                    total = 0
+                    for sm in _SHAPE_RE.finditer(
+                            m.group(2).split(matched_coll)[0]):
+                        dt, dims_s = sm.group(1), sm.group(2)
+                        if dt in _DTYPE_BYTES:
+                            n = 1
+                            for d in dims_s.split(","):
+                                if d:
+                                    n *= int(d)
+                            total += n * _DTYPE_BYTES[dt]
+                    comp.coll_bytes[matched_coll] += total
+            continue
+        for cm_ in _CALLS_RE.finditer(line):
+            comp.children.append((cm_.group(1).lstrip("%"), 1))
+        bm = _BRANCH_RE.search(line)
+        if bm:
+            for b in bm.group(1).split(","):
+                b = b.strip().lstrip("%")
+                if b:
+                    comp.children.append((b, 1))
+    return comp
+
+
+def analyze(text: str) -> dict:
+    bodies = split_computations(text)
+    comps = {n: _analyze_computation(n, ls) for n, ls in bodies.items()}
+
+    # ENTRY computation: the one nobody calls
+    called: set[str] = set()
+    for c in comps.values():
+        for child, _ in c.children:
+            called.add(child)
+    entries = [n for n in comps if n not in called]
+    entry = None
+    for n in entries:
+        if "main" in n:
+            entry = n
+            break
+    if entry is None and entries:
+        entry = max(entries, key=lambda n: comps[n].out_bytes)
+
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def total(name: str, stack=()):  # flops, out_bytes, coll dict
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return 0.0, 0.0, {}
+        flops, out_b = comp.flops, comp.out_bytes
+        colls = dict(comp.coll_bytes)
+        for child, mult in comp.children:
+            cf, cb, cc = total(child, stack + (name,))
+            flops += cf * mult
+            out_b += cb * mult
+            for k, v in cc.items():
+                colls[k] = colls.get(k, 0.0) + v * mult
+        memo[name] = (flops, out_b, colls)
+        return memo[name]
+
+    flops, out_bytes, colls = total(entry) if entry else (0.0, 0.0, {})
+    return {
+        "flops": flops,
+        "out_bytes": out_bytes,
+        "collectives": {**{k: colls.get(k, 0.0) for k in _COLLECTIVES},
+                        "total": sum(colls.values())},
+        "n_computations": len(comps),
+        "entry": entry,
+    }

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A v5e pod is a 16x16 chip grid (256 chips); the multi-pod deployment is
+2 pods = 512 chips connected over DCN.  Functions, not module constants —
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_slice_mesh(devices, shape: tuple[int, int],
+                    axes: tuple[str, str] = ("data", "model")):
+    """Mesh over a sub-slice's devices (multi-tenant launcher)."""
+    import numpy as np
+    arr = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

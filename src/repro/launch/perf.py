@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver — hypothesis -> change -> re-lower -> measure.
+
+Each experiment is (arch, shape, mesh, policy, microbatches); results append
+to experiments/perf/<name>.json and print roofline deltas vs the baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --name qwen3_train \
+        --arch qwen3-0.6b --shape train_4k --policy no_fsdp
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.launch.analysis import ROOFLINE_HEADER
+from repro.launch.dryrun import roofline_of, run_combo
+from repro.sharding.partitioning import POLICIES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="baseline", choices=list(POLICIES))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--windowed-cache", action="store_true")
+    ap.add_argument("--keep-hlo", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    overrides = {"windowed_cache": True} if args.windowed_cache else None
+    res = run_combo(args.arch, args.shape, args.multi_pod,
+                    policy=args.policy, microbatches=args.microbatches,
+                    keep_hlo=args.keep_hlo, config_overrides=overrides)
+    print(ROOFLINE_HEADER)
+    if res.ok:
+        print(roofline_of(res).row()
+              + f"  [{res.per_device_bytes / 2**30:.2f} GiB/dev, "
+              f"{res.compile_s:.0f}s compile]")
+        colls = res.collectives or {}
+        print("collectives: " + ", ".join(
+            f"{k}={v / 1e9:.2f}GB" for k, v in colls.items()
+            if v and k != "count" and k != "total")
+            + f"  total={colls.get('total', 0) / 1e9:.2f}GB")
+    else:
+        print(f"FAILED: {res.error[:500]}")
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.name}.json")
+    hist = []
+    if os.path.exists(path):
+        hist = json.load(open(path))
+    entry = dataclasses.asdict(res)
+    entry["microbatches"] = args.microbatches
+    hist.append(entry)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
+    print(f"appended -> {path} ({len(hist)} runs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Serving driver — batched greedy decoding with the paper's memory watch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --requests 4 --prompt-len 8 --max-new 32 [--partition-gb 10]
+
+With ``--partition-gb`` the engine runs the time-series predictor against
+that slice size and performs the early restart (grow to the next profile)
+when the converged peak estimate exceeds it — the live §2.3 flow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.core.restart import NeedsLargerPartition
+from repro.core.tpu_slices import TpuPodBackend
+from repro.models import registry
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.training.checkpoint import load_checkpoint
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-context", type=int, default=256)
+    ap.add_argument("--partition-gb", type=float, default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"[serve] {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"family={cfg.family}")
+    params, _ = registry.init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt:
+        state = load_checkpoint(args.ckpt, {"params": jax.device_get(params)})
+        params = state["params"]
+        print(f"[serve] weights from {args.ckpt}")
+
+    backend = TpuPodBackend()
+    profile_gb = args.partition_gb
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, args.prompt_len
+                                        ).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+
+    while True:
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(max_batch=args.requests,
+                                          max_context=args.max_context,
+                                          partition_gb=profile_gb,
+                                          predict=profile_gb is not None),
+                             backend=backend)
+        t0 = time.time()
+        try:
+            out = engine.run(reqs)
+            dt = time.time() - t0
+            n_tok = sum(len(r.generated) for r in out)
+            print(f"[serve] {n_tok} tokens in {dt:.1f}s "
+                  f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+            for r in out[:4]:
+                print(f"  req {r.uid}: {r.generated[:16]}"
+                      f"{'...' if len(r.generated) > 16 else ''}")
+            peak = engine.accountant.peak_in_use / 1024 ** 3
+            print(f"[serve] peak live memory {peak:.3f} GB over "
+                  f"{len(engine.accountant.history)} iterations")
+            break
+        except NeedsLargerPartition as e:
+            nxt = e.profile or backend.tightest_profile(
+                (profile_gb or 1.0) * 2)
+            print(f"[serve] EARLY RESTART: predictor flagged the "
+                  f"{profile_gb:.1f}GB slice -> regrowing to "
+                  f"{nxt.name} ({nxt.mem_gb:.1f}GB)")
+            profile_gb = nxt.mem_gb
+
+
+if __name__ == "__main__":
+    main()

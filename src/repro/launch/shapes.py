@@ -1,0 +1,79 @@
+"""Assigned input-shape presets and ShapeDtypeStruct builders.
+
+    train_4k     seq=4,096    global_batch=256   (training)
+    prefill_32k  seq=32,768   global_batch=32    (inference-prefill)
+    decode_32k   seq=32,768   global_batch=128   (inference-decode: ONE new
+                                                  token, KV cache of seq)
+    long_500k    seq=524,288  global_batch=1     (long-context decode;
+                                                  sub-quadratic archs only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePreset:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    batch: int
+    long_context: bool = False
+    microbatches: int = 8
+
+
+SHAPES: dict[str, ShapePreset] = {
+    "train_4k": ShapePreset("train_4k", "train", 4096, 256,
+                            microbatches=8),
+    "prefill_32k": ShapePreset("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapePreset("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapePreset("long_500k", "decode", 524288, 1,
+                             long_context=True),
+}
+
+
+def applicable(cfg: ModelConfig, preset: ShapePreset) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the DESIGN.md §4 skip matrix."""
+    if preset.long_context and not cfg.has_subquadratic_attention:
+        return False, ("pure full-attention arch: 500k decode excluded "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+def spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, preset: ShapePreset) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this preset —
+    weak-type-correct, shardable, zero device allocation."""
+    b, s = preset.batch, preset.seq
+    if preset.kind == "train":
+        out = {"tokens": spec((b, s), jnp.int32),
+               "labels": spec((b, s), jnp.int32)}
+    elif preset.kind == "prefill":
+        out = {"tokens": spec((b, s), jnp.int32)}
+    else:  # decode: ONE new token; the KV cache carries `seq` positions
+        out = {"tokens": spec((b, 1), jnp.int32)}
+    if cfg.family == "audio" and preset.kind != "decode":
+        # seq_len applies to the DECODER token stream; the encoder always
+        # sees the model's native frame count (whisper: 1500)
+        out["frames"] = spec((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and cfg.vision_tokens and preset.kind != "decode":
+        out["patches"] = spec((b, cfg.vision_tokens, cfg.d_model),
+                              jnp.bfloat16)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, preset: ShapePreset) -> dict:
+    """ShapeDtypeStructs for the decode caches at this preset's context."""
+    shapes = jax.eval_shape(
+        lambda: registry.init_caches(cfg, preset.batch, preset.seq))
+    return shapes

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k router, group-limited capacity dispatch,
+expert-parallel execution over the "model" mesh axis.
+
+Dispatch follows the Switch/T5X group-limited scheme: tokens are split into
+groups, capacity is enforced per group, and dispatch/combine are one-hot
+einsums — pure XLA, shardable, no data-dependent shapes.  Expert weights are
+stacked [E, ...] and sharded over the "model" axis (expert parallelism);
+dispatched activations [E, B, G, C, d] travel via the all-to-all XLA inserts
+for the batch->expert resharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamBuilder
+from repro.sharding.partitioning import constrain
+
+MOE_GROUP = 512  # tokens per dispatch group
+
+
+def init_moe(b: ParamBuilder, cfg: ModelConfig,
+             stacked: int | None = None) -> None:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    b.add("router", lead + (d, e), lax_ + ("embed", None), scale=0.02)
+    b.add("w_gate", lead + (e, d, f), lax_ + ("experts", "embed", "expert_ffn"))
+    b.add("w_up", lead + (e, d, f), lax_ + ("experts", "embed", "expert_ffn"))
+    b.add("w_down", lead + (e, f, d), lax_ + ("experts", "expert_ffn", "embed"))
+
+
+def moe_layer(params: dict, x: jax.Array, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,d], aux load-balancing loss scalar)."""
+    b_, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g_sz = min(MOE_GROUP, s)
+    while s % g_sz != 0:  # groups must tile the sequence
+        g_sz //= 2
+    g = s // g_sz
+    cap = int(max(k, g_sz * cfg.capacity_factor * k / e))
+    xg = x.reshape(b_, g, g_sz, d)
+
+    logits = jnp.einsum("bgtd,de->bgte", xg,
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)              # [B,G,T,E] f32
+
+    # -- load-balance aux loss (Switch): E * mean(frac_tokens * frac_prob)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32),
+                           axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # -- top-k gates -> per-(token, expert) weight, zero outside top-k
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)        # [B,G,T,k]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # -- capacity assignment: position of each token within its expert queue
+    combine = jnp.zeros((b_, g, g_sz, e, cap), jnp.float32)
+    dispatch = jnp.zeros((b_, g, g_sz, e, cap), jnp.bool_)
+    used = jnp.zeros((b_, g, 1, e), jnp.float32)  # tokens queued per expert
+    for slot in range(k):
+        idx = gate_idx[..., slot]                        # [B,G,T]
+        w = gate_vals[..., slot]
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # [B,G,T,E]
+        # queue position: earlier tokens this slot + all earlier slots
+        pos_e = jnp.cumsum(onehot, axis=2) - onehot + used  # [B,G,T,E]
+        pos = (pos_e * onehot).sum(axis=-1)              # [B,G,T]
+        keep = pos < cap
+        sel = onehot * keep[..., None]                  # [B,G,T,E]
+        used = used + sel.sum(axis=2, keepdims=True)
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # [B,G,T,C]
+        dispatch = dispatch | (sel[..., None] * pos_oh[..., None, :]
+                               ).astype(jnp.bool_)
+        combine = combine + (w[..., None, None] * sel[..., None]
+                             * pos_oh[..., None, :])
+
+    dispatch_f = dispatch.astype(x.dtype)
+    expert_in = jnp.einsum("bgtec,bgtd->ebgcd", dispatch_f, xg)
+    expert_in = constrain(expert_in, ("experts", "batch", None, None, None))
+
+    # -- expert FFN (stacked weights, sharded over 'model' via 'experts')
+    gate = jnp.einsum("ebgcd,edf->ebgcf", expert_in, params["w_gate"])
+    up = jnp.einsum("ebgcd,edf->ebgcf", expert_in, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    h = act * up
+    expert_out = jnp.einsum("ebgcf,efd->ebgcd", h, params["w_down"])
+    expert_out = constrain(expert_out,
+                           ("experts", "batch", None, None, None))
+
+    out = jnp.einsum("bgtec,ebgcd->bgtd", combine.astype(x.dtype),
+                     expert_out)
+    out = out.reshape(b_, s, d)
+    return constrain(out, ("batch", "seq", None)), aux

@@ -1,0 +1,433 @@
+"""Decoder-only transformer stacks for the dense / MoE / VLM / SSM families.
+
+Layers are scan-stacked (params carry a leading ``layers`` axis) so 48-81
+layer models compile quickly; per-layer attention patterns (gemma3's 5
+local : 1 global, llama4's chunked iRoPE) ride along the scan as traced
+window/chunk vectors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed_tokens, init_embedding, init_mlp,
+                                 init_rmsnorm, mlp, padded_vocab, rmsnorm,
+                                 unembed)
+from repro.models.module import ParamBuilder
+from repro.sharding.partitioning import constrain
+
+GLOBAL = attn.GLOBAL_WINDOW
+
+
+def layer_pattern(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer window sizes: GLOBAL for global layers, the local window
+    (sliding or chunk) otherwise — consumed as traced scan inputs."""
+    win = []
+    for i in range(cfg.n_layers):
+        if cfg.layer_is_global(i):
+            win.append(GLOBAL)
+        elif cfg.sliding_window is not None:
+            win.append(cfg.sliding_window)
+        elif cfg.attention_chunk is not None:
+            win.append(cfg.attention_chunk)
+        else:
+            win.append(GLOBAL)
+    return jnp.asarray(win, jnp.int32)
+
+
+def chunked_flags(cfg: ModelConfig) -> bool:
+    return cfg.attention_chunk is not None
+
+
+def windowed_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, n_tail) for the windowed-cache decode layout:
+    groups of (global_every) layers = (ge-1) local + 1 global; trailing
+    local layers form the tail (gemma3: 62 = 10x6 + 2)."""
+    ge = cfg.global_every
+    n_groups = cfg.n_layers // ge
+    return n_groups, ge, cfg.n_layers - n_groups * ge
+
+
+def remat_layer(fn):
+    """Per-layer activation checkpointing: inside a scanned stack only the
+    inter-layer carry is saved; everything else recomputes in backward.
+    This is the baseline checkpoint policy (DESIGN.md) — without it a
+    62-layer 4k-seq step saves every per-layer intermediate and blows HBM."""
+    import functools
+    return functools.partial(jax.checkpoint, prevent_cse=False)(fn)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecoderOutput:
+    logits: jax.Array
+    aux_loss: jax.Array
+
+
+# -- init ---------------------------------------------------------------------------
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    b = ParamBuilder(key)
+    init_embedding(b, cfg)
+    lyr = b.sub("layers")
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        ssm_lib.init_ssm(lyr, cfg, stacked=L)
+        init_rmsnorm_stacked(lyr, "norm1", cfg.d_model, L)
+    else:
+        attn.init_attention(lyr, cfg, stacked=L)
+        init_rmsnorm_stacked(lyr, "norm1", cfg.d_model, L)
+        init_rmsnorm_stacked(lyr, "norm2", cfg.d_model, L)
+        if cfg.n_experts and cfg.moe_every == 1:
+            moe_lib.init_moe(lyr, cfg, stacked=L)
+        elif cfg.n_experts:
+            # alternating dense/MoE (llama4): separate stacked sub-trees
+            n_moe = L // cfg.moe_every
+            n_dense = L - n_moe
+            moe_lib.init_moe(b.sub("moe_layers"), cfg, stacked=n_moe)
+            init_mlp(b.sub("dense_layers"), cfg,
+                     d_ff=cfg.d_ff * cfg.moe_every, stacked=n_dense)
+        else:
+            init_mlp(lyr, cfg, stacked=L)
+    init_rmsnorm(b, "final_norm", cfg.d_model)
+    return b.build()
+
+
+def init_rmsnorm_stacked(b: ParamBuilder, name: str, dim: int, L: int):
+    b.add(name, (L, dim), ("layers", "norm"), init="ones")
+
+
+# -- forward (train / prefill) ---------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            extra_embeddings: jax.Array | None = None,
+            last_only: bool = False) -> DecoderOutput:
+    """tokens: [B,S] int32. extra_embeddings: [B,V,d] stub frontend output
+    (VLM patches) overriding the first V positions."""
+    b_, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    if extra_embeddings is not None:
+        v = extra_embeddings.shape[1]
+        x = jnp.concatenate([extra_embeddings.astype(x.dtype), x[:, v:]],
+                            axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s), (b_, s))
+    windows = layer_pattern(cfg)
+    is_chunked = chunked_flags(cfg)
+
+    if cfg.family == "ssm":
+        @remat_layer
+        def ssm_body(h, lp):
+            return (h + ssm_lib.ssm_forward(
+                lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), cfg), None)
+
+        x, _ = jax.lax.scan(ssm_body, x, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.n_experts and cfg.moe_every > 1:
+        x, aux = _forward_interleaved_moe(params, cfg, x, positions, windows)
+    else:
+        @remat_layer
+        def body(carry, xs):
+            h, aux = carry
+            lp, win = xs
+            window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+            chunk = window if is_chunked else None
+            w_arg = None if is_chunked else window
+            h = h + attn.mha_full(lp, rmsnorm(h, lp["norm1"], cfg.norm_eps),
+                                  cfg, positions, window=w_arg, chunk=chunk)
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.n_experts:
+                out, a = moe_lib.moe_layer(lp, hn, cfg)
+                aux = aux + a
+            else:
+                out = mlp(lp, hn, cfg)
+            h = h + out
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], windows))
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return DecoderOutput(logits=logits, aux_loss=aux)
+
+
+def _forward_interleaved_moe(params, cfg, x, positions, windows):
+    """llama4-style: layer i is MoE iff (i+1) % moe_every == 0; the stacks
+    are scanned separately in interleaved order via two scans per pair."""
+    L = cfg.n_layers
+    m = cfg.moe_every
+    n_pairs = L // m
+    is_chunked = chunked_flags(cfg)
+    # reshape stacked params into [n_pairs, ...] chunks
+    dense = params["dense_layers"]
+    moe_p = params["moe_layers"]
+    lyr = params["layers"]
+
+    @remat_layer
+    def pair_body(carry, xs):
+        h, aux = carry
+        lp_group, dense_group, moe_lp, win_group = xs
+
+        # (m-1) dense layers then 1 MoE layer, all attention-bearing
+        def inner(carry2, xs2):
+            h2 = carry2
+            lp, dlp, win = xs2
+            window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+            chunk = window if is_chunked else None
+            w_arg = None if is_chunked else window
+            h2 = h2 + attn.mha_full(
+                lp, rmsnorm(h2, lp["norm1"], cfg.norm_eps), cfg, positions,
+                window=w_arg, chunk=chunk)
+            h2 = h2 + mlp(dlp, rmsnorm(h2, lp["norm2"], cfg.norm_eps), cfg)
+            return h2, None
+
+        if m > 1:
+            h, _ = jax.lax.scan(
+                inner, h,
+                (jax.tree_util.tree_map(lambda a: a[:m - 1], lp_group),
+                 dense_group,
+                 win_group[:m - 1]))
+        lp_last = jax.tree_util.tree_map(lambda a: a[m - 1], lp_group)
+        win = win_group[m - 1]
+        window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+        chunk = window if is_chunked else None
+        w_arg = None if is_chunked else window
+        h = h + attn.mha_full(
+            lp_last, rmsnorm(h, lp_last["norm1"], cfg.norm_eps), cfg,
+            positions, window=w_arg, chunk=chunk)
+        out, a = moe_lib.moe_layer(
+            moe_lp, rmsnorm(h, lp_last["norm2"], cfg.norm_eps), cfg)
+        return (h + out, aux + a), None
+
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_pairs, m) + a.shape[1:]), lyr)
+    dense_grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_pairs, m - 1) + a.shape[1:]), dense)
+    win_grouped = windows.reshape(n_pairs, m)
+    (x, aux), _ = jax.lax.scan(
+        pair_body, (x, jnp.zeros((), jnp.float32)),
+        (grouped, dense_grouped, moe_p, win_grouped))
+    return x, aux
+
+
+# -- decode ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, context: int) -> dict:
+    caches: dict[str, Any] = {}
+    if cfg.family == "ssm":
+        caches["ssm"] = ssm_lib.init_ssm_cache(cfg, cfg.n_layers, batch)
+    elif cfg.kv_quant and not cfg.n_experts:
+        # int8 KV: dense/VLM only — MoE top-k routing is discontinuous and
+        # amplifies quantization perturbations into expert flips
+        caches.update(attn.init_kv_cache_quant(cfg, cfg.n_layers, batch,
+                                               context))
+    elif (cfg.windowed_cache and cfg.sliding_window and cfg.global_every
+          and not cfg.n_experts):
+        ng, ge, tail = windowed_layout(cfg)
+        w = min(cfg.sliding_window, context)
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        import jax.numpy as _jnp
+        caches["local_k"] = _jnp.zeros((ng, ge - 1, batch, w, kh, hd),
+                                       _jnp.bfloat16)
+        caches["local_v"] = _jnp.zeros_like(caches["local_k"])
+        gk, gv = attn.init_kv_cache(cfg, ng, batch, context)
+        caches["global_k"], caches["global_v"] = gk, gv
+        if tail:
+            caches["tail_k"] = _jnp.zeros((tail, batch, w, kh, hd),
+                                          _jnp.bfloat16)
+            caches["tail_v"] = _jnp.zeros_like(caches["tail_k"])
+    else:
+        k, v = attn.init_kv_cache(cfg, cfg.n_layers, batch, context)
+        caches["k"], caches["v"] = k, v
+    return caches
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                index: jax.Array, caches: dict) -> tuple[jax.Array, dict]:
+    """token: [B,1] int32; index: scalar int32 position.  Returns
+    (logits [B,1,V], updated caches)."""
+    x = embed_tokens(params, token, cfg)
+    windows = layer_pattern(cfg)
+    is_chunked = chunked_flags(cfg)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            h = carry
+            lp, conv_c, state_c = xs
+            out, conv_c, state_c = ssm_lib.ssm_decode_step(
+                lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), conv_c, state_c,
+                cfg)
+            return h + out, (conv_c, state_c)
+
+        x, (conv_cs, state_cs) = jax.lax.scan(
+            body, x, (params["layers"], caches["ssm"]["conv"],
+                      caches["ssm"]["state"]))
+        caches = {"ssm": {"conv": conv_cs, "state": state_cs}}
+    elif "k_q" in caches:
+        def body_q(carry, xs):
+            h = carry
+            lp, kq, ks, vq, vs, win = xs
+            window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+            chunk = window if is_chunked else None
+            w_arg = None if is_chunked else window
+            out, new_c = attn.mha_decode_quant(
+                lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), cfg, kq, ks, vq,
+                vs, index, window=w_arg, chunk=chunk)
+            h = h + out
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.n_experts:
+                out2, _ = moe_lib.moe_layer(lp, hn, cfg)
+            else:
+                out2 = mlp(lp, hn, cfg)
+            return h + out2, new_c
+
+        x, (kq, ks, vq, vs) = jax.lax.scan(
+            body_q, x, (params["layers"], caches["k_q"], caches["k_s"],
+                        caches["v_q"], caches["v_s"], windows))
+        caches = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
+    elif "local_k" in caches:
+        x, caches = _decode_windowed(params, cfg, x, index, caches)
+    elif cfg.n_experts and cfg.moe_every > 1:
+        x, caches = _decode_interleaved_moe(params, cfg, x, index, caches,
+                                            windows)
+    else:
+        def body(carry, xs):
+            h = carry
+            lp, ck, cv, win = xs
+            window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+            chunk = window if is_chunked else None
+            w_arg = None if is_chunked else window
+            out, ck, cv = attn.mha_decode(
+                lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), cfg, ck, cv,
+                index, window=w_arg, chunk=chunk)
+            h = h + out
+            hn = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.n_experts:
+                out2, _ = moe_lib.moe_layer(lp, hn, cfg)
+            else:
+                out2 = mlp(lp, hn, cfg)
+            return h + out2, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], caches["k"], caches["v"], windows))
+        caches = {"k": ks, "v": vs}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, caches
+
+
+def _decode_interleaved_moe(params, cfg, x, index, caches, windows):
+    L, m = cfg.n_layers, cfg.moe_every
+    n_pairs = L // m
+    is_chunked = chunked_flags(cfg)
+    lyr = params["layers"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_pairs, m) + a.shape[1:]), lyr)
+    dense_grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_pairs, m - 1) + a.shape[1:]),
+        params["dense_layers"])
+    win_grouped = windows.reshape(n_pairs, m)
+    k_grouped = caches["k"].reshape((n_pairs, m) + caches["k"].shape[1:])
+    v_grouped = caches["v"].reshape((n_pairs, m) + caches["v"].shape[1:])
+
+    def one_attn(h, lp, ck, cv, win):
+        window = jnp.where(win >= GLOBAL, jnp.int32(2 ** 30), win)
+        chunk = window if is_chunked else None
+        w_arg = None if is_chunked else window
+        out, ck, cv = attn.mha_decode(
+            lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), cfg, ck, cv, index,
+            window=w_arg, chunk=chunk)
+        return h + out, ck, cv
+
+    def pair_body(carry, xs):
+        h = carry
+        lp_group, dense_group, moe_lp, win_group, ckg, cvg = xs
+
+        def inner(h2, xs2):
+            lp, dlp, win, ck, cv = xs2
+            h2, ck, cv = one_attn(h2, lp, ck, cv, win)
+            h2 = h2 + mlp(dlp, rmsnorm(h2, lp["norm2"], cfg.norm_eps), cfg)
+            return h2, (ck, cv)
+
+        if m > 1:
+            h, (cks, cvs) = jax.lax.scan(
+                inner, h,
+                (jax.tree_util.tree_map(lambda a: a[:m - 1], lp_group),
+                 dense_group, win_group[:m - 1], ckg[:m - 1], cvg[:m - 1]))
+        lp_last = jax.tree_util.tree_map(lambda a: a[m - 1], lp_group)
+        h, ck_l, cv_l = one_attn(h, lp_last, ckg[m - 1], cvg[m - 1],
+                                 win_group[m - 1])
+        out, _ = moe_lib.moe_layer(
+            moe_lp, rmsnorm(h, lp_last["norm2"], cfg.norm_eps), cfg)
+        h = h + out
+        if m > 1:
+            ck_all = jnp.concatenate([cks, ck_l[None]], axis=0)
+            cv_all = jnp.concatenate([cvs, cv_l[None]], axis=0)
+        else:
+            ck_all, cv_all = ck_l[None], cv_l[None]
+        return h, (ck_all, cv_all)
+
+    x, (ks, vs) = jax.lax.scan(
+        pair_body, x,
+        (grouped, dense_grouped, params["moe_layers"], win_grouped,
+         k_grouped, v_grouped))
+    caches = {"k": ks.reshape((L,) + ks.shape[2:]),
+              "v": vs.reshape((L,) + vs.shape[2:])}
+    return x, caches
+
+
+def _decode_windowed(params, cfg, x, index, caches):
+    """Decode with ring-buffer caches on local layers (windowed_cache=True).
+
+    Layers are processed in groups of ``global_every``: (ge-1) local layers
+    use [B, W, KH, hd] ring caches, the group's final layer is global with a
+    full-context cache; trailing local layers form the tail.
+    """
+    ng, ge, tail = windowed_layout(cfg)
+    lyr = params["layers"]
+    body_p = jax.tree_util.tree_map(
+        lambda a: a[:ng * ge].reshape((ng, ge) + a.shape[1:]), lyr)
+
+    def mlp_block(h, lp):
+        return h + mlp(lp, rmsnorm(h, lp["norm2"], cfg.norm_eps), cfg)
+
+    def local_step(h, xs):
+        lp, ck, cv = xs
+        out, ck, cv = attn.mha_decode_windowed(
+            lp, rmsnorm(h, lp["norm1"], cfg.norm_eps), cfg, ck, cv, index)
+        h = mlp_block(h + out, lp)
+        return h, (ck, cv)
+
+    def group_body(h, xs):
+        lp_group, lck, lcv, gck, gcv = xs
+        local_p = jax.tree_util.tree_map(lambda a: a[:ge - 1], lp_group)
+        h, (lck, lcv) = jax.lax.scan(local_step, h, (local_p, lck, lcv))
+        lp_g = jax.tree_util.tree_map(lambda a: a[ge - 1], lp_group)
+        out, gck, gcv = attn.mha_decode(
+            lp_g, rmsnorm(h, lp_g["norm1"], cfg.norm_eps), cfg, gck, gcv,
+            index)
+        h = mlp_block(h + out, lp_g)
+        return h, (lck, lcv, gck, gcv)
+
+    x, (lk, lv, gk, gv) = jax.lax.scan(
+        group_body, x, (body_p, caches["local_k"], caches["local_v"],
+                        caches["global_k"], caches["global_v"]))
+    new = {"local_k": lk, "local_v": lv, "global_k": gk, "global_v": gv}
+    if tail:
+        tail_p = jax.tree_util.tree_map(lambda a: a[ng * ge:], lyr)
+        x, (tk, tv) = jax.lax.scan(
+            local_step, x, (tail_p, caches["tail_k"], caches["tail_v"]))
+        new["tail_k"], new["tail_v"] = tk, tv
+    return x, new

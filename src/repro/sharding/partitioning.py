@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules -> jax NamedSharding / PartitionSpec.
+
+The framework shards with a 2D (or 3D multi-pod) mesh:
+
+    ("data", "model")          — one v5e pod, 16x16
+    ("pod", "data", "model")   — 2 pods, 2x16x16
+
+Parameters are tensor-parallel over "model" (heads / ffn / experts / vocab)
+and FSDP-sharded over "data" on the embed dim; activations shard batch over
+("pod", "data").  Every rule is divisibility-checked against the mesh so any
+(arch x mesh) combination lowers — non-divisible dims fall back to
+replication (e.g. llama4's 40 heads on a 16-wide model axis).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> preferred mesh axes, in priority order
+PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP / ZeRO-3 over the data axis
+    "embed_no_fsdp": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    # fallback: when heads/kv_heads don't divide the model axis (llama4's 40
+    # q heads, kv=8 on a 16-wide axis), shard the head_dim instead
+    "head_dim": ("model",),
+    "qkv": ("model",),           # fused q/k/v output dim
+    "ffn": ("model",),
+    "experts": ("model",),       # expert parallelism
+    # fallback: grok's 8 experts don't divide a 16-wide model axis; shard
+    # the expert FFN dim so expert weights never replicate
+    "expert_ffn": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "layers": (),                # scan-stacked leading axis
+    "conv": (),
+    "norm": (),
+}
+
+ACT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    # KV caches whose kv_heads don't divide the model axis shard their
+    # context dim instead: decode attention then runs block-local with one
+    # tiny [B,1,H,hd] psum, vs psumming full score rows under head_dim
+    # sharding (measured 28GB/step of all-reduce on qwen3 decode_32k).
+    "cache_seq": ("model",),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "vocab": ("model",),
+    "capacity": (),
+}
+
+#: greedy assignment priority: earlier names claim mesh axes first,
+#: regardless of their position in the value's axis tuple.
+AXIS_PRIORITY = ("experts", "kv_heads", "heads", "ssm_inner", "ffn",
+                 "expert_ffn", "vocab", "batch", "cache_seq", "head_dim",
+                 "embed", "qkv", "seq", "capacity")
+
+# -- named sharding POLICIES (the §Perf hillclimb knobs) ----------------------
+#: each entry patches PARAM_RULES / ACT_RULES; selected per dry-run via
+#: --policy.  Hypotheses and measurements live in EXPERIMENTS.md §Perf.
+POLICIES: dict[str, dict] = {
+    "baseline": {"param": {}, "act": {}},
+    # small models: drop FSDP — replicate params over 'data', keeping only
+    # tensor parallelism; removes the per-microbatch weight all-gathers
+    "no_fsdp": {"param": {"embed": ()}, "act": {}},
+    # decode: weights are read once per token — FSDP gathers dominate the
+    # step, so inference shards MoE expert_ffn over 'data' instead of
+    # FSDP-sharding embed, and replicates the (small) attention weights
+    "inference": {"param": {"embed": (), "expert_ffn": ("data", "model")},
+                  "act": {}},
+    # multi-pod MoE: experts spread over (model x pod) and the expert FFN
+    # dim over data — expert weights are FULLY sharded with no d-dim FSDP,
+    # so they are never all-gathered (iteration 1 showed d-sharded expert
+    # weights gather 7.5TB/dev/step); tokens route via all-to-all instead.
+    # Attention/dense weights (3% of params) replicate over data.
+    # (act-side expert pod-sharding measured WORSE — dispatched activations
+    # then cross pods twice per layer; weights-only is the right cut)
+    "expert_pod": {"param": {"embed": (),
+                             "experts": ("model", "pod"),
+                             "expert_ffn": ("data",)},
+                   "act": {}},
+    # small models (<~2B): 16-way tensor parallelism only buys per-layer
+    # activation psums; keep TP on the vocab dim alone (logits/CE stay
+    # sharded) and replicate everything else — the single grad all-reduce
+    # per step is the only remaining sync
+    "vocab_tp_only": {"param": {"embed": (), "heads": (), "kv_heads": (),
+                                "head_dim": (), "ffn": (),
+                                "ssm_inner": ()},
+                      "act": {"batch": ("pod", "data", "model"),
+                              "heads": (), "kv_heads": (), "head_dim": (),
+                              "ffn": (), "ssm_inner": (),
+                              "cache_seq": ("model",)}},
+    # sequence parallelism for huge-model training: shard the residual
+    # stream's seq dim over 'model' — the per-layer scan carries (the
+    # dominant saved activations under remat) shard 16x; XLA re-gathers
+    # around attention where full sequence is needed
+    "seq_shard": {"param": {}, "act": {"seq": ("model",)}},
+    # small models, final form: 256-way pure data parallelism — everything
+    # replicated, batch over every mesh axis, the per-step gradient
+    # all-reduce is the only collective; microbatches bound the replicated
+    # logits working set
+    "pure_dp": {"param": {"embed": (), "heads": (), "kv_heads": (),
+                          "head_dim": (), "ffn": (), "ssm_inner": (),
+                          "vocab": ()},
+                "act": {"batch": ("pod", "data", "model"), "vocab": (),
+                        "heads": (), "kv_heads": (), "head_dim": (),
+                        "ffn": (), "ssm_inner": (), "cache_seq": ()}},
+}
+
+
+def apply_policy(policy: str) -> tuple[dict, dict]:
+    p = POLICIES[policy]
+    return ({**PARAM_RULES, **p["param"]}, {**ACT_RULES, **p["act"]})
+
+
+#: rules consulted by in-model ``constrain`` calls; policies swap these at
+#: trace time via :func:`active_act_rules` (a plain module global is correct
+#: here — tracing is single-threaded and constraints bake into the jaxpr)
+_ACTIVE_ACT_RULES: dict = ACT_RULES
+
+
+class active_act_rules:
+    """Context manager: make ``constrain`` use a policy's activation rules
+    while a function is being traced/lowered."""
+
+    def __init__(self, rules: dict) -> None:
+        self.rules = rules
+
+    def __enter__(self):
+        global _ACTIVE_ACT_RULES
+        self._saved = _ACTIVE_ACT_RULES
+        _ACTIVE_ACT_RULES = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_ACT_RULES
+        _ACTIVE_ACT_RULES = self._saved
+        return False
+
+#: long-context decode (batch=1): shard the KV-cache context over "data"
+LONG_CONTEXT_OVERRIDES = {
+    "batch": (),
+    "cache_seq": ("data",),
+    "seq": ("data",),
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(logical_axes: tuple[str | None, ...],
+             mesh: Mesh,
+             dims: tuple[int, ...],
+             rules: dict[str, tuple[str, ...]],
+             overrides: dict[str, tuple[str, ...]] | None = None) -> P:
+    """Build a PartitionSpec for a value with the given logical axes.
+
+    Each logical axis maps to the mesh axes its rule names, filtered by
+    (a) presence in the mesh, (b) divisibility of the dim, (c) not already
+    used by an earlier axis of this value.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out: list = [None] * len(logical_axes)
+
+    def prio(item):
+        axis = item[1][0]
+        try:
+            return AXIS_PRIORITY.index(axis)
+        except ValueError:
+            return len(AXIS_PRIORITY)
+
+    indexed = [(i, (axis, dim)) for i, (axis, dim)
+               in enumerate(zip(logical_axes, dims)) if axis is not None]
+    for i, (axis, dim) in sorted(indexed, key=prio):
+        wanted = (overrides or {}).get(axis, rules.get(axis, ()))
+        chosen: list[str] = []
+        shard = 1
+        for m in wanted:
+            if m not in sizes or m in used:
+                continue
+            if dim % (shard * sizes[m]) != 0:
+                continue
+            chosen.append(m)
+            shard *= sizes[m]
+            used.add(m)
+        if chosen:
+            out[i] = chosen[0] if len(chosen) == 1 else tuple(chosen)
+    return P(*out)
+
+
+def param_sharding(logical_axes, mesh, dims, long_context=False):
+    ov = LONG_CONTEXT_OVERRIDES if long_context else None
+    return NamedSharding(mesh, spec_for(tuple(logical_axes), mesh,
+                                        tuple(dims), PARAM_RULES, ov))
+
+
+def act_spec(logical_axes, mesh, dims, long_context=False) -> P:
+    ov = LONG_CONTEXT_OVERRIDES if long_context else None
+    return spec_for(tuple(logical_axes), mesh, tuple(dims),
+                    _ACTIVE_ACT_RULES, ov)
+
+
+def constrain(x, logical_axes, mesh=None, long_context=False):
+    """with_sharding_constraint by logical axes; no-op outside a mesh ctx."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = act_spec(logical_axes, mesh, x.shape, long_context)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Mesh | None:
+    env_mesh = jax._src.mesh.thread_resources.env.physical_mesh
+    return env_mesh if env_mesh is not None and not env_mesh.empty else None
+
+
+def tree_param_shardings(param_specs: dict, mesh: Mesh):
+    """Map {path: (logical_axes, shape)} -> {path: NamedSharding}."""
+    return {k: param_sharding(axes, mesh, shape)
+            for k, (axes, shape) in param_specs.items()}

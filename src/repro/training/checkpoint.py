@@ -1,0 +1,75 @@
+"""Checkpointing: flat-key npz + JSON manifest, pure numpy (no orbax here).
+
+Used by the training driver for periodic saves and by the multi-tenant
+launcher for job migration snapshots (though migration itself prefers the
+checkpointless ``restart.migrate_state`` path, matching the paper's
+no-checkpoint design vs MISO — this module exists for durability, not for
+reconfiguration).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix.rstrip(SEP)] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray], skeleton: Any, prefix: str = ""
+               ) -> Any:
+    if isinstance(skeleton, dict):
+        return {k: _unflatten(flat, v, f"{prefix}{k}{SEP}")
+                for k, v in skeleton.items()}
+    if isinstance(skeleton, (list, tuple)):
+        typ = type(skeleton)
+        return typ(_unflatten(flat, v, f"{prefix}{i}{SEP}")
+                   for i, v in enumerate(skeleton))
+    return flat[prefix.rstrip(SEP)]
+
+
+def save_checkpoint(path: str, state: Any, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    host_state = jax.device_get(state)
+    flat = _flatten(host_state)
+    # bf16 isn't npz-native: view as uint16 and record the dtype
+    dtypes = {}
+    arrays = {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        arrays[k] = v.view(np.uint16) if v.dtype.name == "bfloat16" else v
+    np.savez(path, **{k.replace("/", "__"): v for k, v in arrays.items()})
+    with open(path + ".manifest.json", "w") as f:
+        json.dump({"step": step, "dtypes": dtypes}, f)
+
+
+def load_checkpoint(path: str, skeleton: Any) -> Any:
+    import ml_dtypes  # bundled with jax
+
+    with open(path + ".manifest.json") as f:
+        manifest = json.load(f)
+    raw = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = {}
+    for k_enc in raw.files:
+        k = k_enc.replace("__", "/")
+        v = raw[k_enc]
+        if manifest["dtypes"][k] == "bfloat16":
+            v = v.view(ml_dtypes.bfloat16)
+        flat[k] = v
+    return _unflatten(flat, skeleton)

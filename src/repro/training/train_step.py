@@ -1,0 +1,71 @@
+"""The jittable training step + state construction."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig,
+                     moments_dtype=None) -> tuple[dict, dict]:
+    import jax.numpy as _jnp
+    params, specs = registry.init_params(key, cfg)
+    mdt = moments_dtype if moments_dtype is not None else _jnp.float32
+    return {"params": params, "opt": init_opt_state(params, mdt)}, specs
+
+
+def train_step(state: dict, batch: dict, *, cfg: ModelConfig,
+               opt_cfg: AdamWConfig, n_microbatches: int = 1
+               ) -> tuple[dict, dict]:
+    """One optimizer step; jit with cfg/opt_cfg closed over.
+
+    ``n_microbatches > 1`` enables gradient accumulation: the global batch
+    is scanned in microbatch slices with a remat'd body, so saved
+    activations scale with the microbatch — the difference between fitting
+    and OOMing a 314B model's 4k-seq step on a v5e pod.  Gradients
+    accumulate in the scan-transposed backward (dtype = param dtype).
+    """
+
+    def loss(params):
+        if n_microbatches == 1:
+            return registry.loss_fn(params, cfg, batch)
+
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_microbatches,
+                                 x.shape[0] // n_microbatches) + x.shape[1:]),
+            batch)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def body(acc, mb):
+            l, out = registry.loss_fn(params, cfg, mb)
+            return (acc[0] + l / n_microbatches,
+                    acc[1] + out.aux_loss / n_microbatches), None
+
+        (l, aux), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            micro)
+        from repro.models.transformer import DecoderOutput
+        return l, DecoderOutput(logits=jnp.zeros((), jnp.float32),
+                                aux_loss=aux)
+
+    (loss_val, out), grads = jax.value_and_grad(loss, has_aux=True)(
+        state["params"])
+    new_params, new_opt, info = adamw_update(state["params"], grads,
+                                             state["opt"], opt_cfg)
+    metrics = {"loss": loss_val, "aux_loss": out.aux_loss, **info}
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    n_microbatches: int = 1):
+    opt_cfg = opt_cfg or AdamWConfig()
+    return functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                             n_microbatches=n_microbatches)

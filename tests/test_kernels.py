@@ -1,0 +1,133 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import flash_mha, ssd_mixer
+from repro.kernels.ref import attention_ref, ssd_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _mk_qkv(key, b, s, h, kh, d, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, s, kh, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, s, kh, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _ref_bshd(q, k, v, **kw):
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    return t(attention_ref(t(q), t(k), t(v), **kw))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s", [128, 256, 384])
+    @pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (8, 1)])
+    def test_causal_shapes(self, s, h, kh):
+        q, k, v = _mk_qkv(jax.random.PRNGKey(0), 2, s, h, kh, 64,
+                          jnp.float32)
+        out = flash_mha(q, k, v, causal=True, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 128, 1024])
+    def test_sliding_window(self, window):
+        q, k, v = _mk_qkv(jax.random.PRNGKey(1), 2, 256, 4, 2, 64,
+                          jnp.float32)
+        out = flash_mha(q, k, v, causal=True, window=window, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = _mk_qkv(jax.random.PRNGKey(2), 1, 128, 2, 2, 128, dtype)
+        out = flash_mha(q, k, v, causal=True, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   ref.astype(jnp.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_non_causal(self):
+        q, k, v = _mk_qkv(jax.random.PRNGKey(3), 1, 128, 2, 2, 64,
+                          jnp.float32)
+        out = flash_mha(q, k, v, causal=False, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_ragged_seq_padding(self):
+        """S not a multiple of the block: ops.py pads and slices exactly."""
+        q, k, v = _mk_qkv(jax.random.PRNGKey(4), 1, 200, 2, 2, 64,
+                          jnp.float32)
+        out = flash_mha(q, k, v, causal=True, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.sampled_from([128, 256]), h=st.sampled_from([2, 4]),
+           d=st.sampled_from([32, 64]), seed=st.integers(0, 100))
+    def test_property_random_shapes(self, s, h, d, seed):
+        q, k, v = _mk_qkv(jax.random.PRNGKey(seed), 1, s, h, h, d,
+                          jnp.float32)
+        out = flash_mha(q, k, v, causal=True, interpret=True)
+        ref = _ref_bshd(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def _mk_ssd(key, b, s, h, p, n):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    b_in = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    c_in = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    return x, dt, a, b_in, c_in
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (256, 128)])
+    def test_kernel_vs_sequential_oracle(self, s, chunk):
+        args = _mk_ssd(jax.random.PRNGKey(0), 2, s, 3, 32, 16)
+        y = ssd_mixer(*args, chunk=chunk, interpret=True)
+        y_ref, _ = ssd_ref(*args)
+        np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-4)
+
+    def test_model_chunked_scan_matches_oracle(self):
+        """models/ssm.ssd_chunked (the XLA path) vs the sequential oracle."""
+        x, dt, a, b_in, c_in = _mk_ssd(jax.random.PRNGKey(1), 2, 256, 3,
+                                       32, 16)
+        y, final = ssd_chunked(x, dt, a, b_in, c_in, chunk=64)
+        y_ref, final_ref = ssd_ref(x, dt, a, b_in, c_in)
+        np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(final, final_ref, atol=2e-4, rtol=2e-4)
+
+    def test_ragged_padding(self):
+        args = _mk_ssd(jax.random.PRNGKey(2), 1, 100, 2, 16, 8)
+        y = ssd_mixer(*args, chunk=64, interpret=True)
+        y_ref, _ = ssd_ref(*args)
+        np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x, dt, a, b_in, c_in = _mk_ssd(jax.random.PRNGKey(3), 1, 128, 2,
+                                       32, 16)
+        y = ssd_mixer(x.astype(dtype), dt, a, b_in, c_in, chunk=64,
+                      interpret=True)
+        y_ref, _ = ssd_ref(x, dt, a, b_in, c_in)
+        tol = 2e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(y.astype(jnp.float32), y_ref,
+                                   atol=tol, rtol=tol)
+
+    @settings(max_examples=8, deadline=None)
+    @given(h=st.sampled_from([1, 2, 4]), p=st.sampled_from([16, 32]),
+           n=st.sampled_from([8, 16]), seed=st.integers(0, 100))
+    def test_property_random_dims(self, h, p, n, seed):
+        args = _mk_ssd(jax.random.PRNGKey(seed), 1, 128, h, p, n)
+        y = ssd_mixer(*args, chunk=64, interpret=True)
+        y_ref, _ = ssd_ref(*args)
+        np.testing.assert_allclose(y, y_ref, atol=5e-4, rtol=5e-4)

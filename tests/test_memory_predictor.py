@@ -1,0 +1,129 @@
+"""Tests for the time-series memory predictor (paper §3, Algorithm 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory.timeseries import (PeakMemoryPredictor, Prediction,
+                                          run_to_convergence, Z_99)
+from repro.core.memory.accountant import MemoryAccountant, pytree_nbytes
+from repro.core.memory.workspace import parse_cublas_workspace_config
+from repro.core.scheduler.job import (GB, llm_growth_trajectory,
+                                      solve_growth_params)
+
+
+class TestPredictor:
+    def test_exact_linear_trajectory_recovered(self):
+        """Clean linear data: prediction == a*T + b with zero sigma."""
+        p = PeakMemoryPredictor(max_iter=100, converge_k=2)
+        out = None
+        for t in range(10):
+            out = p.observe(req_mem=1000.0 + 50.0 * t, reuse_ratio=1.0)
+        assert out.converged
+        assert out.sigma == pytest.approx(0.0, abs=1e-6)
+        assert out.peak_mem_bytes == pytest.approx(1000.0 + 50.0 * 99, rel=1e-6)
+
+    def test_ci_margin_scales_with_noise(self):
+        rng = np.random.default_rng(0)
+        preds = []
+        for noise in (0.0, 100.0):
+            p = PeakMemoryPredictor(max_iter=50, converge_k=3)
+            for t in range(30):
+                p_out = p.observe(1000.0 + 10 * t + rng.normal(0, noise), 1.0)
+            preds.append(p_out.peak_mem_bytes)
+        assert preds[1] > preds[0]  # z*sigma margin grows with variance
+
+    def test_qwen2_scenario_predict_at_6_vs_oom_at_94(self):
+        """The paper's headline result (§2.3): Qwen2-7B on a 10GB slice OOMs
+        after 94 iterations; the predictor flags it at iteration 6."""
+        k = solve_growth_params(base_gb=6.0, oom_gb=10.0, oom_iter=94,
+                                req_gb_per_iter=0.5)
+        traj = llm_growth_trajectory(n_iters=120, base_gb=6.0,
+                                     req_gb_per_iter=0.5, inv_reuse_slope=k,
+                                     t_per_iter=1.0, seed=1)
+        assert traj.oom_iteration(10 * GB) == 94
+        pred, fired_at = run_to_convergence(traj.req_mem, traj.reuse_ratio,
+                                            max_iter=120,
+                                            partition_bytes=10 * GB)
+        assert fired_at <= 10  # paper: 6th iteration
+        assert pred.peak_mem_bytes > 10 * GB
+
+    def test_prediction_error_within_paper_band(self):
+        """§5.2.2: average prediction error at 10% of iterations ~15%."""
+        errors = []
+        for seed in range(8):
+            k = solve_growth_params(6.0, 12.0, 80, 0.6)
+            traj = llm_growth_trajectory(120, 6.0, 0.6, k, 1.0,
+                                         noise_gb=0.15, seed=seed)
+            pred, _ = run_to_convergence(traj.req_mem[:12],
+                                         traj.reuse_ratio[:12], max_iter=120)
+            errors.append(abs(pred.peak_mem_bytes - traj.peak_phys)
+                          / traj.peak_phys)
+        assert np.mean(errors) < 0.20
+
+    def test_no_false_alarm_on_flat_memory(self):
+        p = PeakMemoryPredictor(max_iter=1000)
+        for t in range(50):
+            out = p.observe(5 * GB, 0.9)
+        assert out.converged
+        assert not p.will_oom(10 * GB, out)
+
+    def test_will_oom_requires_convergence(self):
+        p = PeakMemoryPredictor(max_iter=100)
+        out = p.observe(5 * GB, 1.0)
+        assert not p.will_oom(1.0, out)  # not converged yet
+
+    @settings(max_examples=40, deadline=None)
+    @given(a=st.floats(0.0, 1e8), b=st.floats(1e6, 1e9),
+           k=st.floats(0.0, 0.5))
+    def test_property_prediction_upper_bounds_trend(self, a, b, k):
+        """With the 99% CI margin, the prediction never falls below the pure
+        trend value at the horizon for noiseless inputs."""
+        p = PeakMemoryPredictor(max_iter=200)
+        out = None
+        for t in range(12):
+            out = p.observe(b + a * t, 1.0 / (1.0 + k * t))
+        trend_at_T = (b + a * 199) / (1.0 + k * 199)
+        assert out.peak_mem_bytes >= trend_at_T * 0.99
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(1e3, 1e12), min_size=3, max_size=40))
+    def test_property_predictor_total_function(self, series):
+        """Any positive series yields a finite prediction (robustness)."""
+        p = PeakMemoryPredictor(max_iter=100)
+        for m in series:
+            out = p.observe(m, 0.5)
+        assert np.isfinite(out.peak_mem_bytes)
+        assert out.peak_mem_bytes >= 0.0
+
+
+class TestAccountant:
+    def test_pytree_nbytes(self):
+        tree = {"a": np.zeros((4, 4), np.float32),
+                "b": [np.zeros(10, np.int8)]}
+        assert pytree_nbytes(tree) == 4 * 4 * 4 + 10
+
+    def test_iteration_stats_feed_predictor(self):
+        acc = MemoryAccountant()
+        for t in range(5):
+            acc.note_alloc(np.zeros(1000, np.float32))
+            acc.note_live(np.zeros(500 * (t + 1), np.float32))
+            acc.end_iteration()
+        req, reuse = acc.series()
+        assert len(req) == 5
+        assert req[-1] > req[0]            # cumulative requests grow
+        assert acc.peak_in_use == 500 * 5 * 4
+
+    def test_reuse_ratio_bounded(self):
+        acc = MemoryAccountant()
+        acc.note_alloc(1000.0)
+        acc.note_live(400.0)
+        s = acc.end_iteration()
+        assert 0.0 < s.reuse_ratio <= 1.0
+
+
+class TestWorkspace:
+    def test_parse_cublas_config(self):
+        assert parse_cublas_workspace_config(":4096:8") == 4096 * 1024 * 8
+        assert parse_cublas_workspace_config(":4096:2,:16384:2") == \
+            (4096 * 2 + 16384 * 2) * 1024

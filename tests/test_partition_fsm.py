@@ -1,0 +1,197 @@
+"""Unit + property tests for the partition FSMs (paper §4.1-4.2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mig_a100 import MigA100Backend, N_GPC, N_MEM_SLICES
+from repro.core.partition_state import enumerate_states, saturated
+from repro.core.reachability import (fully_configured_states,
+                                     precompute_reachability)
+from repro.core.tpu_slices import TpuPodBackend, f_configs, chips_at_depth
+from repro.core.partition_manager import PartitionManager
+
+
+@pytest.fixture(scope="module")
+def a100():
+    return MigA100Backend()
+
+
+@pytest.fixture(scope="module")
+def tpu():
+    return TpuPodBackend()
+
+
+class TestMigA100:
+    def test_profile_table_matches_paper(self, a100):
+        """§4.1: 5GB/10GB/20GB/20GB/40GB profiles with 1/7..7/7 compute."""
+        by_name = {p.name: p for p in a100.profiles}
+        assert by_name["1g.5gb"].mem_gb == 5.0
+        assert by_name["2g.10gb"].mem_gb == 10.0
+        assert by_name["3g.20gb"].mem_gb == 20.0
+        assert by_name["4g.20gb"].mem_gb == 20.0
+        assert by_name["7g.40gb"].mem_gb == 40.0
+        assert by_name["1g.5gb"].compute_fraction == pytest.approx(1 / 7)
+        assert by_name["7g.40gb"].compute_fraction == pytest.approx(1.0)
+
+    def test_nineteen_fully_configured_states(self, a100):
+        """Figure 3 lists exactly 19 valid A100 configurations."""
+        assert len(fully_configured_states(a100)) == 19
+
+    def test_initial_reachability_is_19(self, a100):
+        fcr = precompute_reachability(a100)
+        assert fcr[a100.initial_state()] == 19
+
+    def test_paper_placement_example_last_slice_wins(self, a100):
+        """§4.2 worked example: placing the first 1g.5gb on the *last* GPC
+        slice preserves strictly more future configurations than any other
+        placement (paper quotes 9 vs 7 in memory-tuple granularity; in
+        position-refined granularity the ordering is identical)."""
+        fcr = precompute_reachability(a100)
+        p1g = a100._by_name["1g.5gb"]
+        scores = {pl.handle[0]: fcr[pl.next_state]
+                  for pl in a100.enumerate_placements(a100.initial_state(), p1g)}
+        assert len(scores) == 7  # all 7 GPC starts are legal
+        best = max(scores, key=scores.get)
+        assert best == 6  # last slice
+        assert scores[6] > scores[0]
+
+    def test_memory_slices_never_oversubscribed(self, a100):
+        for s in enumerate_states(a100):
+            assert a100._used_mem_slices(s) <= N_MEM_SLICES
+            assert len(a100._occupied_gpcs(s)) <= N_GPC
+
+    def test_free_inverts_alloc(self, a100):
+        s0 = a100.initial_state()
+        for prof in a100.profiles:
+            for pl in a100.enumerate_placements(s0, prof):
+                assert a100.free(pl.next_state, pl.handle) == s0
+
+    def test_two_20gb_partitions_use_4g_and_3g(self, a100):
+        """§5.2.1 Ml3: the A100 splits into 4/7- and 3/7-compute 20GB halves."""
+        pm = PartitionManager(a100)
+        p20 = a100.tightest_profile(20.0)
+        first = pm.allocate(p20)
+        # force the *other* 20GB profile shape to coexist
+        candidates = [p for p in a100.profiles if p.mem_gb == 20.0]
+        second = None
+        for prof in candidates:
+            second = pm.allocate(prof)
+            if second:
+                break
+        assert first is not None and second is not None
+        fracs = sorted([first.profile.compute_fraction,
+                        second.profile.compute_fraction])
+        assert fracs[1] >= 3 / 7  # both halves allocatable simultaneously
+
+
+class TestTpuPod:
+    def test_profiles_cover_valid_v5e_shapes(self, tpu):
+        names = [p.name for p in tpu.profiles]
+        assert names == ["1x1", "1x2", "2x2", "2x4", "4x4", "4x8", "8x8",
+                         "8x16", "16x16"]
+
+    def test_f_configs_recurrence(self):
+        assert f_configs(8) == 1
+        assert f_configs(7) == 2
+        assert f_configs(6) == 5
+        assert f_configs(5) == 26
+
+    def test_reachability_closed_form_matches_enumeration_small(self):
+        """Cross-validate the closed form against literal Alg. 2 on a small
+        pod (depth 3 => 26 full configs)."""
+        small = TpuPodBackend(max_depth=3)
+        # monkeypatch the pod to depth-3 semantics by restricting profiles
+        fcr = precompute_reachability(small)
+        assert fcr[small.initial_state()] == small.reachability(
+            small.initial_state())
+
+    def test_alloc_free_roundtrip(self, tpu):
+        pm = PartitionManager(tpu)
+        parts = [pm.allocate(tpu.profiles[i]) for i in (0, 2, 4)]
+        assert all(parts)
+        for p in parts:
+            pm.release(p)
+        assert pm.state == tpu.initial_state()
+
+    def test_argmax_derives_best_fit(self, tpu):
+        """Splitting the smallest adequate free node maximizes |F_s| — the
+        buddy best-fit policy emerges from Alg. 3 rather than being coded."""
+        pm = PartitionManager(tpu)
+        a = pm.allocate(next(p for p in tpu.profiles if p.name == "8x8"))
+        assert a is not None
+        b = pm.allocate(next(p for p in tpu.profiles if p.name == "1x1"))
+        assert b is not None
+        # the 1x1 must be carved from the remaining space next to the 8x8's
+        # buddy chain, not from a fresh 8x16 half
+        assert b.handle[:1] == a.handle[:1]
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=8), min_size=1,
+                    max_size=12))
+    def test_property_alloc_never_corrupts_state(self, depths):
+        tpu = TpuPodBackend()
+        pm = PartitionManager(tpu)
+        live = []
+        for d in depths:
+            prof = next(p for p in tpu.profiles
+                        if p.extent == chips_at_depth(d))
+            part = pm.allocate(prof)
+            if part is None:
+                continue
+            live.append(part)
+            # invariant: total allocated chips never exceed the pod
+            assert sum(p.profile.extent for p in live) <= 256
+            # invariant: reachability is positive (state remains valid)
+            assert tpu.reachability(pm.state) >= 1
+        for p in live:
+            pm.release(p)
+        assert pm.state == tpu.initial_state()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(min_value=4, max_value=8), min_size=2,
+                    max_size=10), st.randoms())
+    def test_property_free_any_order_coalesces(self, depths, rnd):
+        tpu = TpuPodBackend()
+        pm = PartitionManager(tpu)
+        live = []
+        for d in depths:
+            prof = next(p for p in tpu.profiles
+                        if p.extent == chips_at_depth(d))
+            part = pm.allocate(prof)
+            if part is not None:
+                live.append(part)
+        rnd.shuffle(live)
+        for p in live:
+            pm.release(p)
+        assert pm.state == tpu.initial_state()
+
+
+class TestPartitionManager:
+    def test_reshape_merges_idle_partitions(self, a100):
+        pm = PartitionManager(a100)
+        small = [pm.allocate(a100.profiles[0]) for _ in range(7)]
+        assert all(small)
+        # no room for a 20GB partition now
+        p20 = a100.tightest_profile(20.0)
+        assert pm.allocate(p20) is None
+        # but merging idle 5GB partitions (fusion) makes room
+        part = pm.allocate_with_reshape(p20)
+        assert part is not None and part.profile.mem_gb == 20.0
+
+    def test_reshape_never_touches_busy(self, a100):
+        pm = PartitionManager(a100)
+        parts = [pm.allocate(a100.profiles[0]) for _ in range(7)]
+        for p in parts:
+            p.busy = True
+        p20 = a100.tightest_profile(20.0)
+        assert pm.allocate_with_reshape(p20) is None
+        assert len(pm.live) == 7  # nothing was destroyed
+
+    def test_rollback_on_infeasible_reshape(self, tpu):
+        pm = PartitionManager(tpu)
+        full = pm.allocate(tpu.profiles[-1])  # whole pod
+        assert full is not None
+        full.busy = True
+        extra = pm.allocate_with_reshape(tpu.profiles[0])
+        assert extra is None
+        assert len(pm.live) == 1
