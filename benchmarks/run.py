@@ -11,8 +11,8 @@ import argparse
 import sys
 
 from benchmarks import (bench_breakdown, bench_fig4_general, bench_fig4_ml,
-                        bench_kernels, bench_predictor, bench_reachability,
-                        bench_roofline, bench_tpu_pod)
+                        bench_fleet, bench_kernels, bench_predictor,
+                        bench_reachability, bench_roofline, bench_tpu_pod)
 
 BENCHES = {
     "fig4_general": bench_fig4_general.run,   # paper Fig. 4a-4d
@@ -23,6 +23,7 @@ BENCHES = {
     "kernels": bench_kernels.run,             # Pallas kernel paths
     "roofline": bench_roofline.run,           # §Roofline (dry-run derived)
     "tpu_pod": bench_tpu_pod.run,             # the TPU adaptation, end-to-end
+    "fleet": bench_fleet.run,                 # multi-GPU fleet routing
 }
 
 

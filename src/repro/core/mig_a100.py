@@ -14,16 +14,15 @@ MIG instances ("profiles") occupy a contiguous span of GPC slices and may only
 A state is the tuple of occupied GPC spans.  This is exactly the paper's
 "(5GB, 5GB, 30GB-unallocated)" notation, refined with slice positions so that
 delta is well-defined (the paper notes placement position matters — the
-motivating 7-vs-9 reachability example).
+motivating 7-vs-9 reachability example).  The span-FSM mechanics live in
+:mod:`repro.core.mig_span`; this module is just the A100 table.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Hashable
 
-from repro.core.partition_state import (PartitionBackend, PartitionProfile,
-                                        Placement)
+from repro.core.mig_span import MigSpanBackend
 
 N_GPC = 7
 N_MEM_SLICES = 8
@@ -39,82 +38,13 @@ _PROFILE_TABLE: dict[str, tuple[int, int, tuple[int, ...]]] = {
 }
 
 
-def _make_profiles() -> list[PartitionProfile]:
-    profiles = []
-    for name, (gpcs, mem, _starts) in _PROFILE_TABLE.items():
-        profiles.append(PartitionProfile(
-            name=name, mem_gb=mem * MEM_SLICE_GB,
-            compute_fraction=gpcs / N_GPC, extent=gpcs))
-    return sorted(profiles, key=lambda p: (p.mem_gb, p.compute_fraction))
-
-
-class MigA100Backend(PartitionBackend):
+class MigA100Backend(MigSpanBackend):
     """State = frozenset of (start_gpc, profile_name) instances."""
 
     def __init__(self) -> None:
-        self.profiles = _make_profiles()
-        self._by_name = {p.name: p for p in self.profiles}
-
-    # -- FSM ---------------------------------------------------------------
-
-    def initial_state(self) -> Hashable:
-        return frozenset()
-
-    @staticmethod
-    def _occupied_gpcs(state: frozenset) -> set[int]:
-        occ: set[int] = set()
-        for start, name in state:
-            span = _PROFILE_TABLE[name][0]
-            occ.update(range(start, start + span))
-        return occ
-
-    @staticmethod
-    def _used_mem_slices(state: frozenset) -> int:
-        return sum(_PROFILE_TABLE[name][1] for _s, name in state)
-
-    def enumerate_placements(self, state: Hashable, profile: PartitionProfile
-                             ) -> list[Placement]:
-        state = frozenset(state)
-        gpcs, mem, starts = _PROFILE_TABLE[profile.name]
-        if self._used_mem_slices(state) + mem > N_MEM_SLICES:
-            return []
-        occupied = self._occupied_gpcs(state)
-        placements = []
-        for start in starts:
-            span = set(range(start, start + gpcs))
-            if span & occupied or start + gpcs > N_GPC:
-                continue
-            nxt = frozenset(state | {(start, profile.name)})
-            placements.append(Placement(profile=profile,
-                                        handle=(start, profile.name),
-                                        next_state=nxt))
-        return placements
-
-    def free(self, state: Hashable, handle: Hashable) -> Hashable:
-        state = frozenset(state)
-        if handle not in state:
-            raise KeyError(f"partition {handle} not in state {state}")
-        return frozenset(state - {handle})
-
-    def reachability(self, state: Hashable) -> int:
-        from repro.core.reachability import precompute_reachability
-        fcr = precompute_reachability(self)
-        return fcr[frozenset(state)]
-
-    def total_mem_gb(self) -> float:
-        return N_MEM_SLICES * MEM_SLICE_GB
-
-    # -- paper-facing helpers ----------------------------------------------
-
-    def describe(self, state: Hashable) -> str:
-        """Render a state in the paper's '(5GB, 5GB, 30GB-unallocated)' form."""
-        state = frozenset(state)
-        parts = [f"{_PROFILE_TABLE[name][1] * MEM_SLICE_GB:.0f}GB@gpc{start}"
-                 for start, name in sorted(state)]
-        free_gb = self.total_mem_gb() - sum(
-            _PROFILE_TABLE[name][1] * MEM_SLICE_GB for _s, name in state)
-        parts.append(f"{free_gb:.0f}GB-unallocated")
-        return "(" + ", ".join(parts) + ")"
+        super().__init__(device_name="a100-40gb", table=_PROFILE_TABLE,
+                         n_gpc=N_GPC, n_mem_slices=N_MEM_SLICES,
+                         mem_slice_gb=MEM_SLICE_GB)
 
 
 @functools.lru_cache(maxsize=1)

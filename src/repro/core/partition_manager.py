@@ -91,22 +91,34 @@ class PartitionManager:
             return part
 
         # Fission/fusion: free all idle partitions (merging their space back
-        # into the FSM), retry, then re-create the survivors greedily.  This
-        # realizes "merge neighboring small partitions or split bigger
-        # partitions" in FSM terms: releasing idle space coalesces buddies /
-        # frees GPC spans, and the argmax re-placement splits as needed.
+        # into the FSM) and retry.  On success the idle partitions are
+        # consumed — their space now backs the new placement; on failure
+        # they are restored at their original handles below.  This realizes
+        # "merge neighboring small partitions or split bigger partitions"
+        # in FSM terms: releasing idle space coalesces buddies / frees GPC
+        # spans, and the argmax re-placement splits as needed.
         idle = self.idle_partitions()
         if not idle:
             return None
-        saved = [(p.pid, p.profile) for p in idle]
+        saved = [(p.profile, p.handle) for p in idle]
+        n_reconfigs_before = self.n_reconfigs
         for p in idle:
             self.release(p)
         part = self.allocate(profile)
         if part is None:
-            # roll back: restore the idle partitions (argmax placement again)
-            for _pid, prof in saved:
-                restored = self.allocate(prof)
-                assert restored is not None, "rollback must succeed"
+            # roll back: restore each idle partition at its *original*
+            # placement (argmax re-placement could fragment the state and
+            # leave a survivor with nowhere to go).
+            for prof, handle in saved:
+                placements = self.backend.enumerate_placements(self.state,
+                                                               prof)
+                original = next((pl for pl in placements
+                                 if pl.handle == handle), None)
+                assert original is not None, "rollback must succeed"
+                self._commit(original)
+            # a failed probe is a no-op on the device: don't let the
+            # restore commits count as reconfigurations
+            self.n_reconfigs = n_reconfigs_before
             return None
         self.n_reconfigs += len(saved)
         return part

@@ -21,16 +21,20 @@ from typing import Hashable
 from repro.core.partition_state import (PartitionBackend, enumerate_states,
                                         saturated)
 
-_CACHE: dict[int, dict[Hashable, int]] = {}
+#: key -> (pinned backend, fcr).  Pinning the backend keeps id()-keyed
+#: entries valid (a collected backend's id could be reused); value-keyed
+#: backends (``reachability_cache_key``) share one entry per device table.
+_CACHE: dict[Hashable, tuple[PartitionBackend, dict[Hashable, int]]] = {}
 
 
 def precompute_reachability(backend: PartitionBackend,
                             max_states: int = 2_000_000
                             ) -> dict[Hashable, int]:
     """Algorithm 2 — offline |F_s| for every valid state of ``backend``."""
-    key = id(backend)
+    key_fn = getattr(backend, "reachability_cache_key", None)
+    key = key_fn() if key_fn is not None else id(backend)
     if key in _CACHE:
-        return _CACHE[key]
+        return _CACHE[key][1]
 
     states = enumerate_states(backend, max_states=max_states)
 
@@ -55,7 +59,7 @@ def precompute_reachability(backend: PartitionBackend,
         return out
 
     fcr = {s: len(final_set(s)) for s in states}
-    _CACHE[key] = fcr
+    _CACHE[key] = (backend, fcr)
     return fcr
 
 

@@ -115,6 +115,7 @@ class Metrics:
     n_reconfigs: int
     wasted_seconds: float
     records: list[RunRecord]
+    device: str = ""
 
     @property
     def throughput(self) -> float:
@@ -143,21 +144,33 @@ class _Running:
     avg_util: float = dataclasses.field(compare=False, default=0.0)
 
 
-class ClusterSim:
-    """Shared machinery: time, running set, energy + memory integrals."""
+class DeviceSim:
+    """One device's event simulator: clock, running set, energy + memory
+    integrals, reconfiguration costs and the OOM/early-restart paths.
+
+    Instantiable — a single-device experiment drives one of these directly
+    (the ``run_*`` policies below); the fleet orchestrator
+    (:mod:`repro.fleet.orchestrator`) owns N of them, each with its own
+    clock, behind one global admission queue.
+    """
 
     def __init__(self, backend: PartitionBackend, power: DevicePowerModel,
-                 use_prediction: bool = True, policy: str = "") -> None:
+                 use_prediction: bool = True, policy: str = "",
+                 name: str = "dev0",
+                 reconfig_cost_s: float = RECONFIG_COST_S) -> None:
         self.backend = backend
         self.pm = PartitionManager(backend)
         self.energy = EnergyIntegrator(power)
         self.use_prediction = use_prediction
         self.policy = policy
+        self.name = name
+        self.reconfig_cost_s = reconfig_cost_s
         self.t = 0.0
         self._heap: list[_Running] = []
         self._seq = itertools.count()
         self.records: list[RunRecord] = []
         self.finished: dict[str, float] = {}
+        self.arrivals: dict[str, float] = {}
         self.n_oom = 0
         self.n_early = 0
         self.wasted = 0.0
@@ -187,6 +200,11 @@ class ClusterSim:
 
     def start(self, job: Job, partition: Partition,
               setup_s: float = 0.0) -> _Running:
+        if self.gated:
+            # starting work implies the device is powered: without this a
+            # direct caller would bill the whole run at the gated floor
+            # (the orchestrator ungates earlier to charge wake latency)
+            self.ungate()
         io_stretch = max(1.0, self._io_stretch() + job.io_bw_demand)
         plan = plan_execution(job, partition.profile, io_stretch,
                               self.use_prediction, self.backend)
@@ -202,6 +220,7 @@ class ClusterSim:
         run = _Running(t_end=self.t + plan.duration, seq=next(self._seq),
                        job=job, partition=partition, plan=plan,
                        t_start=self.t, avg_util=avg_util)
+        self.arrivals[job.name] = job.arrival
         # re-integrate with the new running set
         self._advance_time(self.t)
         heapq.heappush(self._heap, run)
@@ -246,18 +265,94 @@ class ClusterSim:
         if t > self.t:
             self._advance_time(t)
 
+    # -- power gating (fleet consolidation) --------------------------------
+
+    @property
+    def gated(self) -> bool:
+        return self.energy.gated
+
+    def gate(self) -> None:
+        """Drop to the gated power floor; only legal while fully idle."""
+        if self._heap:
+            raise ValueError(f"{self.name}: cannot gate with running jobs")
+        self._advance_time(self.t)
+        self.energy.set_gated(True)
+
+    def ungate(self) -> None:
+        self._advance_time(self.t)
+        self.energy.set_gated(False)
+
+    # -- placement (scheme B's step, reusable by the fleet router) ---------
+
+    def candidate_profiles(self, job: Job) -> list[PartitionProfile]:
+        """Profiles to try for ``job``, preferred first: compute is a soft
+        constraint (§4.3) — the profile covering the job's parallelism wins
+        over memory-only tightness (4g.20gb over 3g.20gb for a half-GPU
+        DNN)."""
+        candidates: list[PartitionProfile] = []
+        if job.est_mem_gb is not None:
+            strong = self.backend.tightest_profile(job.est_mem_gb,
+                                                   job.compute_demand)
+            if strong is not None:
+                candidates.append(strong)
+        weak = _tight_profile(self.backend, job)
+        if weak.name not in [c.name for c in candidates]:
+            candidates.append(weak)
+        return candidates
+
+    def try_place(self, job: Job) -> tuple[Partition, float] | None:
+        """Tight idle partition, else create, else merge/split — the
+        scheme-B placement ladder.  Returns (partition, setup seconds) or
+        None when the device cannot host the job right now."""
+        candidates = self.candidate_profiles(job)
+        for profile in candidates:
+            idle = self.pm.idle_partition_with(profile)
+            if idle is not None:
+                return idle, 0.0
+        for profile in candidates:
+            part = (self.pm.allocate(profile)
+                    or self.pm.allocate_with_reshape(profile))
+            if part is not None:
+                return part, self.reconfig_cost_s
+        return None
+
+    # -- routing scores (fleet) --------------------------------------------
+
+    def busy_mem_gb(self) -> float:
+        return sum(p.profile.mem_gb for p in self.pm.live.values() if p.busy)
+
+    def free_mem_gb(self) -> float:
+        """Memory not pinned under a running job (idle partitions count as
+        free: they can be reshaped)."""
+        return self.backend.total_mem_gb() - self.busy_mem_gb()
+
+    def load_fraction(self) -> float:
+        return self.busy_mem_gb() / self.backend.total_mem_gb()
+
+    def fits(self, job: Job) -> bool:
+        """Whether ``job`` can EVER run here (largest profile covers its
+        current memory estimate) — feasibility, not availability."""
+        est = job.est_mem_gb if job.est_mem_gb is not None else 0.0
+        return est <= self.backend.profiles[-1].mem_gb
+
     def metrics(self, n_jobs: int) -> Metrics:
         makespan = max(self.t, 1e-9)
         return Metrics(
             policy=self.policy, n_jobs=n_jobs, makespan=makespan,
-            energy_j=self.energy.joules,
+            energy_j=self.energy.joules, device=self.name,
             mem_util=self._mem_integral / (makespan
                                            * self.backend.total_mem_gb()),
-            mean_turnaround=(sum(self.finished.values())
+            mean_turnaround=(sum(t_end - self.arrivals[name]
+                                 for name, t_end in self.finished.items())
                              / max(len(self.finished), 1)),
             n_oom=self.n_oom, n_early_restarts=self.n_early,
             n_reconfigs=self.pm.n_reconfigs, wasted_seconds=self.wasted,
             records=self.records)
+
+
+#: Backwards-compatible alias — the single-device experiments predate the
+#: fleet refactor that renamed the component.
+ClusterSim = DeviceSim
 
 
 # ---------------------------------------------------------------------------
@@ -421,35 +516,11 @@ def run_scheme_b(jobs: Iterable[Job], backend: PartitionBackend,
             continue
         scheduled_any = False
         while queue:
-            job = queue[0]
-            # compute is a soft constraint (§4.3): prefer the profile that
-            # also covers the job's parallelism (4g.20gb over 3g.20gb for a
-            # half-GPU DNN), fall back to memory-only tightness
-            candidates = []
-            if job.est_mem_gb is not None:
-                strong = backend.tightest_profile(job.est_mem_gb,
-                                                  job.compute_demand)
-                if strong is not None:
-                    candidates.append(strong)
-            weak = _tight_profile(backend, job)
-            if weak.name not in [c.name for c in candidates]:
-                candidates.append(weak)
-            part, setup = None, RECONFIG_COST_S
-            for profile in candidates:
-                idle = sim.pm.idle_partition_with(profile)
-                if idle is not None:
-                    part, setup = idle, 0.0
-                    break
-            if part is None:
-                for profile in candidates:
-                    part = (sim.pm.allocate(profile)
-                            or sim.pm.allocate_with_reshape(profile))
-                    if part is not None:
-                        break
-            if part is None:
+            placed = sim.try_place(queue[0])
+            if placed is None:
                 break  # SLEEP: wait for a finish event
-            queue.pop(0)
-            sim.start(job, part, setup_s=setup)
+            part, setup = placed
+            sim.start(queue.pop(0), part, setup_s=setup)
             scheduled_any = True
         if not sim.has_running:
             if queue and not scheduled_any:

@@ -1,0 +1,30 @@
+"""Fleet-level orchestration: N heterogeneous devices (A100 MIG, H100 MIG,
+TPU slices) behind one global admission queue.
+
+The paper manages partitions on a *single* A100; this package scales the
+same machinery to a fleet: each device runs its own
+:class:`~repro.core.scheduler.events.DeviceSim` (clock, reconfig costs,
+OOM/early-restart paths) and a pluggable router decides which device admits
+each arriving job.  Consolidation routing packs load so idle devices can be
+power-gated — the fleet-level energy headroom single-device scheduling
+cannot reach (MISO, arXiv:2207.11428; optimal MIG placement,
+arXiv:2409.06646).
+"""
+
+from repro.fleet.arrivals import (diurnal_arrivals, jobs_from_trace,
+                                  load_alibaba_csv, poisson_arrivals,
+                                  synthetic_alibaba_rows)
+from repro.fleet.devices import make_device, make_fleet
+from repro.fleet.energy import FleetEnergyIntegrator
+from repro.fleet.orchestrator import FleetMetrics, FleetOrchestrator, run_fleet
+from repro.fleet.router import (BestFitRouter, EnergyAwareRouter,
+                                RandomRouter, Router, RoundRobinRouter,
+                                make_router)
+
+__all__ = [
+    "BestFitRouter", "EnergyAwareRouter", "FleetEnergyIntegrator",
+    "FleetMetrics", "FleetOrchestrator", "RandomRouter", "Router",
+    "RoundRobinRouter", "diurnal_arrivals", "jobs_from_trace",
+    "load_alibaba_csv", "make_device", "make_fleet", "make_router",
+    "poisson_arrivals", "run_fleet", "synthetic_alibaba_rows",
+]

@@ -1,0 +1,132 @@
+"""Pluggable fleet routing policies.
+
+A router orders the feasible devices for one job; the orchestrator commits
+to the first device whose placement ladder (idle partition -> create ->
+merge/split) succeeds.  Routing is where fleet-level throughput/energy
+headroom lives (MISO schedules MIG jobs across a cluster; arXiv:2409.06646
+shows placement *across* devices is the remaining optimization surface):
+
+* :class:`RoundRobinRouter` / :class:`RandomRouter` — baselines,
+* :class:`BestFitRouter` — tightest profile first, then least remaining
+  free capacity, tie-broken by the post-placement reachability score
+  (Algorithm 3's |F_s| lifted to device choice),
+* :class:`EnergyAwareRouter` — consolidation: pack the busiest awake
+  device so idle devices can be power-gated; wake the cheapest gated
+  device only when no awake device can host.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Sequence
+
+from repro.core.scheduler.events import DeviceSim
+from repro.core.scheduler.job import Job
+
+
+class Router:
+    """Order feasible devices for ``job``, most preferred first."""
+
+    name = "router"
+    #: consolidation routers ask the orchestrator to gate idle devices
+    consolidates = False
+
+    def rank(self, job: Job, devices: Sequence[DeviceSim]
+             ) -> list[DeviceSim]:
+        raise NotImplementedError
+
+    @staticmethod
+    def feasible(job: Job, devices: Sequence[DeviceSim]) -> list[DeviceSim]:
+        return [d for d in devices if d.fits(job)]
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def rank(self, job: Job, devices: Sequence[DeviceSim]
+             ) -> list[DeviceSim]:
+        feas = self.feasible(job, devices)
+        if not feas:
+            return []
+        start = self._next % len(feas)
+        self._next += 1
+        return feas[start:] + feas[:start]
+
+
+class RandomRouter(Router):
+    name = "random"
+
+    def __init__(self, seed: int = 0) -> None:
+        self._rng = random.Random(seed)
+
+    def rank(self, job: Job, devices: Sequence[DeviceSim]
+             ) -> list[DeviceSim]:
+        feas = self.feasible(job, devices)
+        self._rng.shuffle(feas)
+        return feas
+
+
+def _reach_score(dev: DeviceSim) -> float:
+    """Current-state reachability normalized against the empty device, in
+    log space so MIG counts (~10-150) and TPU buddy counts (~1e45) are
+    comparable.  1.0 = pristine, -> 0 as the FSM saturates."""
+    reach = dev.backend.reachability(dev.pm.state)
+    reach0 = dev.backend.reachability(dev.backend.initial_state())
+    if reach0 <= 1:
+        return 1.0
+    return math.log1p(reach) / math.log1p(reach0)
+
+
+class BestFitRouter(Router):
+    name = "best_fit"
+
+    def rank(self, job: Job, devices: Sequence[DeviceSim]
+             ) -> list[DeviceSim]:
+        est = job.est_mem_gb if job.est_mem_gb is not None else 0.0
+
+        def key(dev: DeviceSim):
+            prof = (dev.backend.tightest_profile(est, job.compute_demand)
+                    or dev.backend.profiles[-1])
+            waste = prof.mem_gb - est
+            free_after = dev.free_mem_gb() - prof.mem_gb
+            # smaller waste, then fill the fullest device, then keep the
+            # fleet's future configuration space (reachability) largest
+            return (dev.gated, waste, free_after, -_reach_score(dev))
+
+        return sorted(self.feasible(job, devices), key=key)
+
+
+class EnergyAwareRouter(Router):
+    name = "energy_aware"
+    consolidates = True
+
+    def rank(self, job: Job, devices: Sequence[DeviceSim]
+             ) -> list[DeviceSim]:
+        feas = self.feasible(job, devices)
+        awake = [d for d in feas if not d.gated]
+        gated = [d for d in feas if d.gated]
+        # pack the busiest awake device first (first-fit-decreasing in
+        # spirit); among equals keep the cheapest idle floor awake
+        awake.sort(key=lambda d: (-d.load_fraction(),
+                                  d.energy.model.p_idle_w))
+        # wake the device with the smallest idle draw only as a last resort
+        gated.sort(key=lambda d: d.energy.model.p_idle_w)
+        return awake + gated
+
+
+def make_router(name: str, seed: int = 0) -> Router:
+    routers = {
+        "round_robin": RoundRobinRouter,
+        "random": lambda: RandomRouter(seed),
+        "best_fit": BestFitRouter,
+        "energy_aware": EnergyAwareRouter,
+    }
+    try:
+        return routers[name]()
+    except KeyError:
+        raise ValueError(f"unknown router {name!r}; "
+                         f"known: {sorted(routers)}") from None

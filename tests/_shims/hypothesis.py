@@ -1,0 +1,122 @@
+"""Minimal, deterministic stand-in for ``hypothesis``.
+
+Loaded by the root ``conftest.py`` ONLY when the real package is absent
+(hermetic containers where installing is not allowed).  It implements the
+small surface the test-suite uses — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` / ``lists`` / ``tuples`` /
+``randoms`` strategies — by drawing a fixed pseudo-random sample per
+example index, so runs are reproducible.  It does no shrinking and no
+coverage-guided search; install real hypothesis (``requirements-dev.txt``)
+for that.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+__version__ = "0.0.0-shim"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 16) if min_value is None else min_value
+    hi = 2 ** 16 if max_value is None else max_value
+    return SearchStrategy(lambda rnd: rnd.randint(lo, hi))
+
+
+def _floats(min_value=None, max_value=None, **_kw) -> SearchStrategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    return SearchStrategy(lambda rnd: rnd.uniform(lo, hi))
+
+
+def _sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rnd: rnd.choice(elements))
+
+
+def _lists(elements: SearchStrategy, min_size=0, max_size=None,
+           **_kw) -> SearchStrategy:
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rnd):
+        n = rnd.randint(min_size, hi)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def _tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(s.draw(rnd) for s in strategies))
+
+
+def _randoms(**_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: random.Random(rnd.getrandbits(64)))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.tuples = _tuples
+strategies.randoms = _randoms
+
+
+def given(*garg_strategies, **gkw_strategies):
+    def decorate(fn):
+        fallback = getattr(fn, "_shim_max_examples", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        fallback or _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                # fixed per-example seed: reruns are bit-identical
+                rnd = random.Random(0x5DEECE66D ^ (i * 2654435761))
+                drawn = [s.draw(rnd) for s in garg_strategies]
+                drawn_kw = {k: s.draw(rnd)
+                            for k, s in gkw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # pytest must not see the strategy-bound parameters as fixtures:
+        # drop __wrapped__ (inspect.signature follows it) and expose only
+        # the parameters NOT filled by strategies (typically just `self`).
+        del wrapper.__wrapped__
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:len(params) - len(garg_strategies)
+                      - len(gkw_strategies)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+# `from hypothesis import strategies as st` resolves the attribute on this
+# module; also register the submodule path for `import hypothesis.strategies`.
+import sys as _sys
+
+_sys.modules.setdefault("hypothesis.strategies", strategies)

@@ -1,0 +1,271 @@
+"""Tests for the fleet orchestrator: H100 FSM, routing, power gating,
+arrival generators, and a deterministic heterogeneous end-to-end sim."""
+
+import math
+
+import pytest
+
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.partition_manager import PartitionManager
+from repro.core.partition_state import enumerate_states
+from repro.core.reachability import (fully_configured_states,
+                                     precompute_reachability)
+from repro.core.scheduler.energy import (A100_POWER, H100_POWER,
+                                         EnergyIntegrator)
+from repro.core.scheduler.job import Job, rodinia_job
+from repro.fleet import (FleetOrchestrator, diurnal_arrivals,
+                         jobs_from_trace, make_fleet, make_router,
+                         poisson_arrivals, run_fleet,
+                         synthetic_alibaba_rows)
+
+
+@pytest.fixture(scope="module")
+def h100():
+    return MigH100Backend()
+
+
+def _mix(n: int, seed: int = 7, rate: float = 0.4):
+    names = ["myocyte", "gaussian", "srad", "euler3d", "particlefilter",
+             "nw", "lavamd", "hotspot3d", "cfd_full"]
+    jobs = [rodinia_job(names[i % len(names)], i) for i in range(n)]
+    return poisson_arrivals(jobs, rate_per_s=rate, seed=seed)
+
+
+class TestH100Fsm:
+    def test_profile_table_matches_hopper(self, h100):
+        by_name = {p.name: p for p in h100.profiles}
+        assert by_name["1g.10gb"].mem_gb == 10.0
+        assert by_name["1g.20gb"].mem_gb == 20.0      # Hopper-only profile
+        assert by_name["1g.20gb"].compute_fraction == pytest.approx(1 / 7)
+        assert by_name["3g.40gb"].mem_gb == 40.0
+        assert by_name["7g.80gb"].mem_gb == 80.0
+        assert by_name["7g.80gb"].compute_fraction == pytest.approx(1.0)
+        assert h100.total_mem_gb() == 80.0
+
+    def test_all_states_legal(self, h100):
+        for state in enumerate_states(h100):
+            assert h100._used_mem_slices(state) <= h100.n_mem_slices
+            occ = h100._occupied_gpcs(state)
+            assert len(occ) <= h100.n_gpc
+            assert all(0 <= g < h100.n_gpc for g in occ)
+
+    def test_richer_than_a100(self, h100):
+        """The 1g.20gb profile makes Hopper's F strictly larger than
+        Ampere's 19 configurations (Fig. 3)."""
+        assert len(fully_configured_states(h100)) > 19
+
+    def test_memory_exhausts_before_gpcs(self, h100):
+        """Four 1g.20gb instances consume all 8 memory slices while only 4
+        GPCs are busy — afterwards nothing is placeable."""
+        pm = PartitionManager(h100)
+        p = next(pr for pr in h100.profiles if pr.name == "1g.20gb")
+        parts = [pm.allocate(p) for _ in range(4)]
+        assert all(parts)
+        for prof in h100.profiles:
+            assert h100.enumerate_placements(pm.state, prof) == []
+
+    def test_reachability_consistent(self, h100):
+        fcr = precompute_reachability(h100)
+        assert fcr[h100.initial_state()] == len(fully_configured_states(h100))
+
+
+class TestRouters:
+    def test_round_robin_rotates(self):
+        devices = make_fleet(["a100"] * 3)
+        router = make_router("round_robin")
+        job = rodinia_job("gaussian")
+        first = [router.rank(job, devices)[0].name for _ in range(3)]
+        assert first == ["a100-0", "a100-1", "a100-2"]
+
+    def test_best_fit_prefers_tight_device(self):
+        """A 35GB job wastes 5GB on either device class, but filling the
+        A100 leaves the H100's 80GB free for bigger work."""
+        devices = make_fleet(["a100", "h100"])
+        router = make_router("best_fit")
+        job = Job(name="j", mem_gb=35.0, t_kernel=1.0, est_mem_gb=35.0)
+        assert router.rank(job, devices)[0].name == "a100-0"
+
+    def test_best_fit_skips_infeasible_device(self):
+        devices = make_fleet(["a100", "h100"])
+        router = make_router("best_fit")
+        job = Job(name="big", mem_gb=60.0, t_kernel=1.0, est_mem_gb=60.0)
+        ranked = router.rank(job, devices)
+        assert [d.name for d in ranked] == ["h100-0"]
+
+    def test_energy_aware_packs_busiest(self):
+        devices = make_fleet(["a100", "a100"])
+        router = make_router("energy_aware")
+        seed_job = rodinia_job("euler3d")        # occupies a 20GB slice
+        part, setup = devices[1].try_place(seed_job)
+        devices[1].start(seed_job, part, setup_s=setup)
+        ranked = router.rank(rodinia_job("gaussian"), devices)
+        assert ranked[0].name == "a100-1"        # consolidate, don't spread
+
+    def test_energy_aware_wakes_gated_last(self):
+        devices = make_fleet(["a100", "a100"])
+        devices[0].gate()
+        router = make_router("energy_aware")
+        ranked = router.rank(rodinia_job("gaussian"), devices)
+        assert [d.name for d in ranked] == ["a100-1", "a100-0"]
+
+
+class TestPowerGating:
+    def test_gated_device_charges_gated_floor(self):
+        integ = EnergyIntegrator(A100_POWER)
+        integ.advance(10.0, 0.0)                 # 10s idle
+        integ.set_gated(True)
+        integ.advance(30.0, 0.0)                 # 20s gated
+        expect = A100_POWER.p_idle_w * 10.0 + A100_POWER.p_gated_w * 20.0
+        assert integ.joules == pytest.approx(expect)
+        assert integ.gated_seconds == pytest.approx(20.0)
+
+    def test_cannot_gate_active_device(self):
+        integ = EnergyIntegrator(H100_POWER)
+        integ.advance(1.0, 0.5)
+        with pytest.raises(ValueError):
+            integ.set_gated(True)
+
+    def test_cannot_run_work_while_gated(self):
+        integ = EnergyIntegrator(A100_POWER)
+        integ.set_gated(True)
+        with pytest.raises(ValueError):
+            integ.advance(5.0, 0.3)
+
+    def test_fleet_integral_charges_idle_only_to_awake(self):
+        """One long job on dev0, dev1 gated: fleet energy must be dev0's
+        curve plus only the *gated* floor for dev1."""
+        fleet = make_fleet(["a100", "a100"])
+        orch = FleetOrchestrator(fleet, make_router("energy_aware"))
+        job = Job(name="solo", mem_gb=30.0, t_kernel=50.0,
+                  compute_demand=0.9, est_mem_gb=30.0)
+        m = orch.run([job])
+        awake = next(d for d in m.per_device if d.n_jobs == 1)
+        idle = next(d for d in m.per_device if d.n_jobs == 0)
+        # the idle device's whole timeline is gated
+        assert m.gated_seconds == pytest.approx(m.makespan, rel=1e-6)
+        assert idle.energy_j == pytest.approx(
+            A100_POWER.p_gated_w * m.makespan, rel=1e-6)
+        assert m.energy_j == pytest.approx(awake.energy_j + idle.energy_j)
+        # and gating saved (p_idle - p_gated) * makespan versus no gating
+        assert m.idle_joules_avoided == pytest.approx(
+            (A100_POWER.p_idle_w - A100_POWER.p_gated_w) * m.makespan,
+            rel=1e-6)
+
+    def test_non_consolidating_router_never_gates(self):
+        m = run_fleet(make_fleet(["a100"] * 2), make_router("round_robin"),
+                      _mix(6))
+        assert m.gated_seconds == 0.0
+        assert m.energy_j >= 2 * A100_POWER.p_idle_w * m.makespan * 0.999
+
+
+class TestArrivals:
+    def test_poisson_is_deterministic_and_monotone(self):
+        a = poisson_arrivals([rodinia_job("gaussian", i) for i in range(20)],
+                             0.5, seed=3)
+        b = poisson_arrivals([rodinia_job("gaussian", i) for i in range(20)],
+                             0.5, seed=3)
+        assert [j.arrival for j in a] == [j.arrival for j in b]
+        arr = [j.arrival for j in a]
+        assert arr == sorted(arr) and arr[0] > 0.0
+
+    def test_diurnal_clusters_on_peak(self):
+        jobs = diurnal_arrivals(
+            [rodinia_job("myocyte", i) for i in range(300)],
+            period_s=100.0, peak_rate=2.0, trough_rate=0.1, seed=5)
+        # rate peaks half a period in, where cos(2*pi*t/period) = -1: the
+        # arrival mass must sit there, not at the trough
+        phases = [math.cos(2 * math.pi * j.arrival / 100.0) for j in jobs]
+        assert sum(phases) / len(phases) < -0.2
+
+    def test_trace_replay_round_trip(self):
+        rows = synthetic_alibaba_rows(50, seed=11)
+        jobs = jobs_from_trace(rows)
+        assert len(jobs) == 50
+        assert all(j.arrival == r.submit_time for j, r in zip(jobs, rows))
+        assert all(j.est_mem_gb == r.mem_gb for j, r in zip(jobs, rows))
+        m = run_fleet(make_fleet(["a100", "h100"]), make_router("best_fit"),
+                      jobs)
+        done = [r for _d, r in m.records if r.outcome == "done"]
+        assert len(done) == 50
+
+
+class TestFleetEndToEnd:
+    def test_deterministic_heterogeneous_sim(self):
+        """>= 20 jobs on >= 2 heterogeneous devices, twice, bit-identical."""
+        def once():
+            return run_fleet(make_fleet(["a100", "a100", "h100"]),
+                             make_router("energy_aware"), _mix(24, seed=13))
+        m1, m2 = once(), once()
+        assert m1.n_jobs == 24
+        done = [r for _d, r in m1.records if r.outcome == "done"]
+        assert len(done) == 24
+        assert {d for d, _r in m1.records} >= {"a100-0", "h100-0"} or \
+            len({d for d, _r in m1.records}) >= 2
+        assert m1.makespan == pytest.approx(m2.makespan)
+        assert m1.energy_j == pytest.approx(m2.energy_j)
+        assert m1.gated_seconds == pytest.approx(m2.gated_seconds)
+        assert [(d, r.job, r.start) for d, r in m1.records] == \
+            [(d, r.job, r.start) for d, r in m2.records]
+
+    def test_oom_migrates_to_bigger_device(self):
+        big = Job(name="big", mem_gb=60.0, t_kernel=5.0,
+                  compute_demand=0.8, est_mem_gb=None)
+        small = [Job(name=f"s{i}", mem_gb=4.0, t_kernel=2.0,
+                     compute_demand=0.3, est_mem_gb=4.0) for i in range(4)]
+        m = run_fleet(make_fleet(["a100", "h100"]), make_router("best_fit"),
+                      [big] + small)
+        final = [(d, r) for d, r in m.records if r.job == "big"][-1]
+        assert final[0] == "h100-0" and final[1].outcome == "done"
+
+    def test_infeasible_job_raises(self):
+        job = Job(name="leviathan", mem_gb=500.0, t_kernel=1.0,
+                  est_mem_gb=500.0)
+        with pytest.raises(RuntimeError, match="fits no device"):
+            run_fleet(make_fleet(["a100", "h100"]),
+                      make_router("round_robin"), [job])
+
+    def test_consolidation_saves_joules_at_matched_throughput(self):
+        """The bench_fleet acceptance property, in miniature: 4xA100,
+        Poisson arrivals — energy-aware beats round-robin on Joules and
+        keeps throughput within 5%."""
+        rr = run_fleet(make_fleet(["a100"] * 4), make_router("round_robin"),
+                       _mix(40, seed=7))
+        ea = run_fleet(make_fleet(["a100"] * 4),
+                       make_router("energy_aware"), _mix(40, seed=7))
+        assert ea.energy_j < rr.energy_j
+        assert ea.throughput >= 0.95 * rr.throughput
+
+    def test_duplicate_job_names_rejected(self):
+        jobs = [Job(name="dup", mem_gb=1.0, t_kernel=1.0, est_mem_gb=1.0)
+                for _ in range(2)]
+        with pytest.raises(ValueError, match="duplicate job names"):
+            run_fleet(make_fleet(["a100"]), make_router("best_fit"), jobs)
+
+    def test_start_on_gated_device_ungates(self):
+        """A direct DeviceSim caller must not bill running work at the
+        gated floor."""
+        dev = make_fleet(["a100"])[0]
+        dev.gate()
+        job = rodinia_job("gaussian")
+        part, setup = dev.try_place(job)
+        dev.start(job, part, setup_s=setup)
+        assert not dev.gated
+        dev.pop_next_finish()
+        # the run's energy is at least the idle floor over its duration
+        assert dev.energy.joules >= A100_POWER.p_idle_w * dev.t * 0.999
+
+    def test_per_device_turnaround_excludes_arrival_offset(self):
+        job = rodinia_job("gaussian")
+        job.arrival = 100.0
+        m = run_fleet(make_fleet(["a100"]), make_router("best_fit"), [job])
+        dev = m.per_device[0]
+        # completion is after t=100, but turnaround is arrival-relative
+        assert m.makespan > 100.0
+        assert 0.0 < dev.mean_turnaround < 20.0
+        assert dev.mean_turnaround == pytest.approx(m.mean_jct)
+
+    def test_single_device_fleet_matches_device_clock(self):
+        m = run_fleet(make_fleet(["a100"]), make_router("best_fit"),
+                      _mix(10, seed=2))
+        assert m.per_device[0].makespan == pytest.approx(m.makespan)
+        assert m.energy_j == pytest.approx(m.per_device[0].energy_j)

@@ -4,6 +4,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mig_a100 import MigA100Backend, N_GPC, N_MEM_SLICES
+from repro.core.mig_h100 import MigH100Backend
 from repro.core.partition_state import enumerate_states, saturated
 from repro.core.reachability import (fully_configured_states,
                                      precompute_reachability)
@@ -19,6 +20,71 @@ def a100():
 @pytest.fixture(scope="module")
 def tpu():
     return TpuPodBackend()
+
+
+@pytest.fixture(scope="module", params=[MigA100Backend, MigH100Backend],
+                ids=["a100", "h100"])
+def mig(request):
+    """Both MIG generations — every span-FSM invariant must hold on each."""
+    return request.param()
+
+
+class TestMigSpanInvariants:
+    """Backend-parametrized FSM invariants (A100 *and* H100)."""
+
+    def test_profiles_sorted_for_tightest_fit(self, mig):
+        mems = [p.mem_gb for p in mig.profiles]
+        assert mems == sorted(mems)
+        assert mig.profiles[-1].mem_gb == mig.total_mem_gb()
+
+    def test_spans_contiguous_and_starts_legal(self, mig):
+        for state in enumerate_states(mig):
+            for start, name in state:
+                gpcs, _mem, starts = mig.table[name]
+                assert start in starts
+                assert start + gpcs <= mig.n_gpc
+            # and within one state, spans never overlap
+            total_span = sum(mig.table[name][0] for _s, name in state)
+            assert len(mig._occupied_gpcs(state)) == total_span
+
+    def test_memory_never_oversubscribed(self, mig):
+        for state in enumerate_states(mig):
+            assert mig._used_mem_slices(state) <= mig.n_mem_slices
+
+    def test_free_inverts_alloc(self, mig):
+        s0 = mig.initial_state()
+        for prof in mig.profiles:
+            for pl in mig.enumerate_placements(s0, prof):
+                assert mig.free(pl.next_state, pl.handle) == s0
+
+    def test_reachability_counts_fully_configured(self, mig):
+        fcr = precompute_reachability(mig)
+        assert fcr[mig.initial_state()] == len(fully_configured_states(mig))
+        for s, count in fcr.items():
+            assert count >= 1
+            if saturated(mig, s):
+                assert count == 1
+
+    def test_fusion_fission_roundtrip(self, mig):
+        """Small idle partitions merge into a big one and back (scheme B's
+        reshape), and a fully-released manager returns to s0."""
+        pm = PartitionManager(mig)
+        smalls = [pm.allocate(mig.profiles[0]) for _ in range(mig.n_gpc)]
+        assert all(smalls)
+        big = mig.profiles[-1]
+        assert pm.allocate(big) is None           # device is full
+        part = pm.allocate_with_reshape(big)      # fusion makes room
+        assert part is not None and part.profile.name == big.name
+        pm.release(part)
+        assert pm.state == mig.initial_state()
+
+    def test_reshape_never_touches_busy(self, mig):
+        pm = PartitionManager(mig)
+        parts = [pm.allocate(mig.profiles[0]) for _ in range(mig.n_gpc)]
+        for p in parts:
+            p.busy = True
+        assert pm.allocate_with_reshape(mig.profiles[-1]) is None
+        assert len(pm.live) == mig.n_gpc          # nothing was destroyed
 
 
 class TestMigA100:
@@ -186,6 +252,20 @@ class TestPartitionManager:
         p20 = a100.tightest_profile(20.0)
         assert pm.allocate_with_reshape(p20) is None
         assert len(pm.live) == 7  # nothing was destroyed
+
+    def test_failed_reshape_probe_is_reconfig_neutral(self, a100):
+        """A failed allocate_with_reshape is a no-op on the device — the
+        rollback's restore commits must not count as reconfigurations
+        (fleet routers probe placement on every ranked device)."""
+        pm = PartitionManager(a100)
+        busy = pm.allocate(next(p for p in a100.profiles
+                                if p.name == "4g.20gb"))
+        busy.busy = True
+        assert pm.allocate(a100.profiles[0]) is not None  # idle 1g.5gb
+        before = pm.n_reconfigs
+        full = next(p for p in a100.profiles if p.name == "7g.40gb")
+        assert pm.allocate_with_reshape(full) is None
+        assert pm.n_reconfigs == before
 
     def test_rollback_on_infeasible_reshape(self, tpu):
         pm = PartitionManager(tpu)
