@@ -6,7 +6,7 @@ from __future__ import annotations
 
 from repro.core.mig_a100 import make_backend
 from repro.core.scheduler.energy import A100_POWER
-from repro.core.scheduler.events import run_baseline, run_scheme_a
+from repro.core.scheduler.policies import run_baseline, run_scheme_a
 from repro.core.scheduler.job import make_mix, rodinia_job
 
 

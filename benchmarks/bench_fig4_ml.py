@@ -7,8 +7,8 @@ import time
 
 from repro.core.mig_a100 import make_backend
 from repro.core.scheduler.energy import A100_POWER
-from repro.core.scheduler.events import (run_baseline, run_scheme_a,
-                                         run_scheme_b)
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
 
 from benchmarks.mixes import ML_MIXES, LLM_SPECS, llm_mix, ml_mix
 

@@ -12,8 +12,8 @@ from __future__ import annotations
 from repro.configs import get_config
 from repro.core.memory.static_estimator import estimate_serve
 from repro.core.scheduler.energy import pod_power_model
-from repro.core.scheduler.events import (run_baseline, run_scheme_a,
-                                         run_scheme_b)
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
 from repro.core.scheduler.job import (GB, Job, llm_growth_trajectory,
                                       solve_growth_params)
 from repro.core.tpu_slices import TpuPodBackend

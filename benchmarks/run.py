@@ -1,18 +1,24 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--outdir DIR]
 
-Prints each table and a final ``name,us_per_call,derived`` CSV.
+Prints each table and a final ``name,us_per_call,derived`` CSV, and writes
+one machine-readable ``BENCH_<name>.json`` per bench next to the CSV so
+the performance trajectory (throughput / energy / SLO attainment) is
+trackable across commits instead of living in scrollback.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 
 from benchmarks import (bench_breakdown, bench_fig4_general, bench_fig4_ml,
                         bench_fleet, bench_kernels, bench_predictor,
-                        bench_reachability, bench_roofline, bench_tpu_pod)
+                        bench_reachability, bench_roofline, bench_serving,
+                        bench_tpu_pod)
 
 BENCHES = {
     "fig4_general": bench_fig4_general.run,   # paper Fig. 4a-4d
@@ -24,23 +30,45 @@ BENCHES = {
     "roofline": bench_roofline.run,           # §Roofline (dry-run derived)
     "tpu_pod": bench_tpu_pod.run,             # the TPU adaptation, end-to-end
     "fleet": bench_fleet.run,                 # multi-GPU fleet routing
+    "serving": bench_serving.run,             # request-level LLM serving SLOs
 }
+
+
+def _write_json(outdir: pathlib.Path, name: str,
+                rows: list[tuple[str, float, str]], extra) -> None:
+    payload: dict = {
+        "bench": name,
+        "rows": [{"name": n, "us_per_call": us, "derived": derived}
+                 for n, us, derived in rows],
+    }
+    if isinstance(extra, dict):
+        payload.update(extra)
+    path = outdir / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--outdir", default=".",
+                    help="where BENCH_<name>.json files land")
     args = ap.parse_args()
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
     rows: list[tuple[str, float, str]] = []
     failures = []
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
+        rows_before = len(rows)
         try:
-            fn(rows)
+            extra = fn(rows)
         except Exception as e:  # keep the harness running
             failures.append((name, repr(e)))
             print(f"\n!! bench {name} failed: {e!r}")
+            continue
+        _write_json(outdir, name, rows[rows_before:], extra)
     print("\n=== CSV ===")
     print("name,us_per_call,derived")
     for name, us, derived in rows:

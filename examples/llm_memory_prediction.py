@@ -14,7 +14,7 @@ from __future__ import annotations
 from repro.core.memory.timeseries import PeakMemoryPredictor
 from repro.core.mig_a100 import make_backend
 from repro.core.scheduler.energy import A100_POWER
-from repro.core.scheduler.events import run_scheme_a
+from repro.core.scheduler.policies import run_scheme_a
 from repro.core.scheduler.job import (GB, Job, llm_growth_trajectory,
                                       solve_growth_params)
 

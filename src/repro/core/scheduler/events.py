@@ -1,11 +1,13 @@
-"""Discrete-event cluster simulator + the paper's scheduling policies.
+"""Device mechanism for the discrete-event simulators.
 
-The paper evaluates on a real A100 polled via nvidia-smi; this module is the
-same experiment as a deterministic discrete-event simulation so the entire
-policy space (baseline / scheme A / scheme B, each with and without the
-time-series predictor) can be evaluated reproducibly on CPU.  The *policies*
-are the paper's Algorithms 4 and 5 verbatim; the device model (runtime
-stretch, IO contention, power) is calibrated to the paper's Tables 3-4.
+The paper evaluates on a real A100 polled via nvidia-smi; this module is
+the *device model* of the same experiment — runtime stretch, IO
+contention, power and memory integrals, the OOM/early-restart execution
+plans — calibrated to the paper's Tables 3-4.  The *policies* (the
+paper's Algorithms 4 and 5, the fleet routers, the serving layer) live in
+:mod:`repro.core.scheduler.policies` and :mod:`repro.fleet`, all driving
+this mechanism through the unified event kernel
+(:mod:`repro.core.scheduler.kernel`).
 """
 
 from __future__ import annotations
@@ -13,12 +15,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Iterable
 
 from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionBackend, PartitionProfile
 from repro.core.scheduler.energy import DevicePowerModel, EnergyIntegrator
 from repro.core.scheduler.job import GB, Job
+from repro.core.scheduler.metrics import Metrics, RunRecord
 from repro.core.memory.timeseries import PeakMemoryPredictor
 
 DONE = "done"
@@ -41,25 +43,13 @@ class ExecutionPlan:
     wasted_seconds: float = 0.0
 
 
-def plan_execution(job: Job, profile: PartitionProfile, io_stretch: float,
-                   use_prediction: bool,
-                   backend: PartitionBackend) -> ExecutionPlan:
-    """Decide how a run of ``job`` on ``profile`` terminates."""
+def _plan_dynamic(job: Job, profile: PartitionProfile, use_prediction: bool,
+                  backend: PartitionBackend) -> ExecutionPlan:
+    """The trajectory replay — O(n_iters); results are cached per
+    (backend, profile, predict) on the job since they depend on nothing
+    else (IO stretch never enters the iterative path)."""
     c = profile.compute_fraction
     part_bytes = profile.mem_gb * GB
-
-    if not job.is_dynamic:
-        full = job.runtime_on(c, io_stretch)
-        if job.mem_gb > profile.mem_gb:
-            # static job with an under-estimate: OOM once allocation happens
-            fail_at = job.t_fixed + 0.1 * (full - job.t_fixed)
-            bigger = backend.next_larger_profile(profile)
-            new_est = bigger.mem_gb if bigger else job.mem_gb
-            return ExecutionPlan(duration=fail_at, outcome=OOM,
-                                 new_est_mem_gb=new_est,
-                                 wasted_seconds=fail_at)
-        return ExecutionPlan(duration=full, outcome=DONE)
-
     traj = job.trajectory
     stretch = max(1.0, job.compute_demand / max(c, 1e-6))
     t_iter = traj.t_per_iter * stretch
@@ -78,7 +68,6 @@ def plan_execution(job: Job, profile: PartitionProfile, io_stretch: float,
                     iterations_run=i + 1, wasted_seconds=dur)
             if oom_it is not None and i >= oom_it:
                 break  # crash arrives before the predictor fires
-
     if oom_it is not None:
         dur = job.t_fixed + (oom_it + 1) * t_iter
         bigger = backend.next_larger_profile(profile)
@@ -90,47 +79,38 @@ def plan_execution(job: Job, profile: PartitionProfile, io_stretch: float,
                          outcome=DONE, iterations_run=traj.n_iters)
 
 
-@dataclasses.dataclass
-class RunRecord:
-    job: str
-    profile: str
-    start: float
-    end: float
-    outcome: str
-    compute_fraction: float
-    mem_gb: float
-    wasted_seconds: float = 0.0
+def plan_execution(job: Job, profile: PartitionProfile, io_stretch: float,
+                   use_prediction: bool,
+                   backend: PartitionBackend) -> ExecutionPlan:
+    """Decide how a run of ``job`` on ``profile`` terminates."""
+    if not job.is_dynamic:
+        c = profile.compute_fraction
+        full = job.runtime_on(c, io_stretch)
+        if job.mem_gb > profile.mem_gb:
+            # static job with an under-estimate: OOM once allocation happens
+            fail_at = job.t_fixed + 0.1 * (full - job.t_fixed)
+            bigger = backend.next_larger_profile(profile)
+            new_est = bigger.mem_gb if bigger else job.mem_gb
+            return ExecutionPlan(duration=fail_at, outcome=OOM,
+                                 new_est_mem_gb=new_est,
+                                 wasted_seconds=fail_at)
+        return ExecutionPlan(duration=full, outcome=DONE)
 
-
-@dataclasses.dataclass
-class Metrics:
-    policy: str
-    n_jobs: int
-    makespan: float
-    energy_j: float
-    mem_util: float            # time-averaged used-mem / device-mem
-    mean_turnaround: float
-    n_oom: int
-    n_early_restarts: int
-    n_reconfigs: int
-    wasted_seconds: float
-    records: list[RunRecord]
-    device: str = ""
-
-    @property
-    def throughput(self) -> float:
-        return self.n_jobs / max(self.makespan, 1e-9)
-
-    @property
-    def energy_per_job(self) -> float:
-        return self.energy_j / max(self.n_jobs, 1)
-
-    def summary(self) -> str:
-        return (f"{self.policy}: jobs={self.n_jobs} makespan={self.makespan:.1f}s "
-                f"thpt={self.throughput:.4f}/s energy={self.energy_j / 1e3:.1f}kJ "
-                f"mem_util={self.mem_util:.2%} turnaround={self.mean_turnaround:.1f}s "
-                f"oom={self.n_oom} early={self.n_early_restarts} "
-                f"reconf={self.n_reconfigs}")
+    # the dynamic path replays the whole trajectory through the predictor —
+    # memoize it so repeated placements/restart probes stay O(1).  The key
+    # captures every input _plan_dynamic reads from the profile/backend
+    # (slice size, compute, the next-larger OOM rung) rather than the
+    # backend class: two differently-parameterized instances of the same
+    # backend class may share profile names but not profile tables.
+    bigger = backend.next_larger_profile(profile)
+    key = (profile.name, profile.mem_gb, profile.compute_fraction,
+           bigger.mem_gb if bigger else None, use_prediction)
+    plan = job.plan_cache.get(key)
+    if plan is None:
+        plan = _plan_dynamic(job, profile, use_prediction, backend)
+        job.plan_cache[key] = plan
+    # callers mutate ``duration`` (setup seconds); hand out a copy
+    return dataclasses.replace(plan)
 
 
 @dataclasses.dataclass(order=True)
@@ -145,11 +125,12 @@ class _Running:
 
 
 class DeviceSim:
-    """One device's event simulator: clock, running set, energy + memory
+    """One device's simulator mechanism: clock, running set, energy + memory
     integrals, reconfiguration costs and the OOM/early-restart paths.
 
-    Instantiable — a single-device experiment drives one of these directly
-    (the ``run_*`` policies below); the fleet orchestrator
+    Instantiable — a single-device experiment drives one of these through
+    the event kernel with a batch policy
+    (:mod:`repro.core.scheduler.policies`); the fleet orchestrator
     (:mod:`repro.fleet.orchestrator`) owns N of them, each with its own
     clock, behind one global admission queue.
     """
@@ -350,15 +331,6 @@ class DeviceSim:
             records=self.records)
 
 
-#: Backwards-compatible alias — the single-device experiments predate the
-#: fleet refactor that renamed the component.
-ClusterSim = DeviceSim
-
-
-# ---------------------------------------------------------------------------
-# Policies
-# ---------------------------------------------------------------------------
-
 def _tight_profile(backend: PartitionBackend, job: Job) -> PartitionProfile:
     est = job.est_mem_gb
     if est is None:
@@ -368,173 +340,3 @@ def _tight_profile(backend: PartitionBackend, job: Job) -> PartitionProfile:
     if prof is None:
         prof = backend.profiles[-1]
     return prof
-
-
-def run_baseline(jobs: Iterable[Job], backend: PartitionBackend,
-                 power: DevicePowerModel) -> Metrics:
-    """The paper's baseline: a non-partitioned device runs the batch
-    sequentially (§5: 'the batch executing sequentially on the GPU')."""
-    jobs = list(jobs)
-    sim = ClusterSim(backend, power, use_prediction=False, policy="baseline")
-    full = backend.profiles[-1]
-    for job in jobs:
-        part = sim.pm.allocate(full)
-        assert part is not None
-        sim.start(job, part)
-        sim.pop_next_finish()
-        sim.pm.release(part)
-    return sim.metrics(len(jobs))
-
-
-def run_scheme_a(jobs: Iterable[Job], backend: PartitionBackend,
-                 power: DevicePowerModel, use_prediction: bool = True,
-                 work_steal: bool = False) -> Metrics:
-    """Algorithm 4 — SCHEDULE_BY_GROUP: sort by MIG group, configure
-    homogeneous slices per group, schedule the group, reconfigure, repeat.
-
-    ``work_steal=False`` reproduces the paper's static equal division of a
-    group across its partitions (the Ml3 corner case); ``True`` is the
-    beyond-paper fix (pull-based dispatch).
-    """
-    jobs = list(jobs)
-    sim = ClusterSim(backend, power, use_prediction, policy="scheme_a"
-                     + ("+pred" if use_prediction else "")
-                     + ("+steal" if work_steal else ""))
-
-    # SORTED_BY_MIG_GROUP: map each job to its tightest profile, group by it
-    groups: dict[str, list[Job]] = {}
-    for job in jobs:
-        groups.setdefault(_tight_profile(backend, job).name, []).append(job)
-    order = sorted(groups, key=lambda n: next(
-        p.mem_gb for p in backend.profiles if p.name == n))
-    pending_larger: list[Job] = []  # OOM/early-restart spill into later groups
-
-    gi = 0
-    while gi < len(order) or pending_larger:
-        if gi < len(order):
-            pname = order[gi]
-            group = groups[pname]
-            gi += 1
-        else:
-            # leftover restarts larger than every original group
-            group = pending_larger
-            pending_larger = []
-            pname = _tight_profile(backend, group[0]).name
-        # pull in restarts that now fit this group's profile
-        profile = next(p for p in backend.profiles if p.name == pname)
-        still_larger = []
-        for j in pending_larger:
-            if _tight_profile(backend, j).name == pname:
-                group.append(j)
-            else:
-                still_larger.append(j)
-        pending_larger = still_larger
-
-        # SET_HOMOGENEOUS_SLICES: carve as many slices of this memory size
-        # as possible, preferring the compute-maximal profile first — on the
-        # A100 this yields 4g.20gb + 3g.20gb (the paper's §5.2.1 pair whose
-        # 4/7 vs 3/7 compute asymmetry causes the Ml3 corner case).
-        same_mem = sorted(
-            [p for p in backend.profiles if p.mem_gb == profile.mem_gb],
-            key=lambda p: -p.compute_fraction)
-        parts: list[Partition] = []
-        while True:
-            part = None
-            for prof_try in same_mem:
-                part = sim.pm.allocate(prof_try)
-                if part is not None:
-                    break
-            if part is None:
-                break
-            parts.append(part)
-        assert parts, f"cannot create any {profile.name} partition"
-
-        # SCHEDULE(group)
-        setup = RECONFIG_COST_S
-        if work_steal:
-            queue = list(group)
-            for part in parts:
-                if queue:
-                    sim.start(queue.pop(0), part, setup_s=setup)
-                    setup = 0.0
-            while sim.has_running:
-                run = sim.pop_next_finish()
-                if run.plan.outcome in (OOM, EARLY_RESTART):
-                    run.job.est_mem_gb = run.plan.new_est_mem_gb
-                    pending_larger.append(run.job)
-                if queue:
-                    sim.start(queue.pop(0), run.partition)
-        else:
-            # paper-faithful: equal static division across partitions
-            queues: list[list[Job]] = [[] for _ in parts]
-            for i, j in enumerate(group):
-                queues[i % len(parts)].append(j)
-            by_part = {p.pid: q for p, q in zip(parts, queues)}
-            for part in parts:
-                if by_part[part.pid]:
-                    sim.start(by_part[part.pid].pop(0), part,
-                              setup_s=setup)
-                    setup = 0.0
-            while sim.has_running:
-                run = sim.pop_next_finish()
-                if run.plan.outcome in (OOM, EARLY_RESTART):
-                    run.job.est_mem_gb = run.plan.new_est_mem_gb
-                    pending_larger.append(run.job)
-                q = by_part[run.partition.pid]
-                if q:
-                    sim.start(q.pop(0), run.partition)
-
-        for part in parts:
-            sim.pm.release(part)
-
-    return sim.metrics(len(jobs))
-
-
-def run_scheme_b(jobs: Iterable[Job], backend: PartitionBackend,
-                 power: DevicePowerModel, use_prediction: bool = True
-                 ) -> Metrics:
-    """Algorithm 5 — SCHEDULE_DYN_RECONFIG: FIFO order; tight idle partition,
-    else create, else merge/split (fusion/fission), else SLEEP until a
-    running job finishes.
-
-    Supports ONLINE arrivals: jobs with ``arrival > 0`` join the queue when
-    their time comes (the paper's "scheduler receives incoming workloads");
-    a batch is simply the all-arrive-at-zero special case."""
-    jobs = list(jobs)
-    sim = ClusterSim(backend, power, use_prediction, policy="scheme_b"
-                     + ("+pred" if use_prediction else ""))
-    pending: list[Job] = sorted([j for j in jobs if j.arrival > 0],
-                                key=lambda j: j.arrival)
-    queue: list[Job] = [j for j in jobs if j.arrival <= 0]
-
-    while queue or sim.has_running or pending:
-        # admit arrivals whose time has come
-        while pending and pending[0].arrival <= sim.t:
-            queue.append(pending.pop(0))
-        if not queue and not sim.has_running and pending:
-            sim.advance_to(pending[0].arrival)
-            continue
-        scheduled_any = False
-        while queue:
-            placed = sim.try_place(queue[0])
-            if placed is None:
-                break  # SLEEP: wait for a finish event
-            part, setup = placed
-            sim.start(queue.pop(0), part, setup_s=setup)
-            scheduled_any = True
-        if not sim.has_running:
-            if queue and not scheduled_any:
-                raise RuntimeError(
-                    f"deadlock: cannot place {queue[0].name} "
-                    f"(est {queue[0].est_mem_gb}GB) on an empty device")
-            continue
-        # wake at whichever comes first: a finish or the next arrival
-        if pending and pending[0].arrival < (sim.next_finish_time or 1e30):
-            sim.advance_to(pending[0].arrival)
-            continue
-        run = sim.pop_next_finish()
-        if run.plan.outcome in (OOM, EARLY_RESTART):
-            run.job.est_mem_gb = run.plan.new_est_mem_gb
-            queue.insert(0, run.job)  # back of... front: it arrived earliest
-
-    return sim.metrics(len(jobs))

@@ -55,6 +55,11 @@ class Job:
     trajectory: MemoryTrajectory | None = None
     arrival: float = 0.0
     size_class: str = ""                # small/medium/large/full (paper mixes)
+    #: memoized dynamic execution plans per (backend, profile, predict) —
+    #: the trajectory replay is O(n_iters), and restart loops re-place the
+    #: same job on the same profiles repeatedly
+    plan_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                         repr=False, compare=False)
 
     def runtime_on(self, compute_fraction: float, io_stretch: float = 1.0
                    ) -> float:

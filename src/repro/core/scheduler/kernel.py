@@ -1,0 +1,209 @@
+"""The unified event-driven scheduling kernel.
+
+Every simulation in this repo — the paper's single-device batch policies
+(baseline / scheme A / scheme B), the multi-device fleet orchestrator, and
+the request-level LLM serving layer — used to carry its own hand-rolled
+event loop.  This module is the one loop they all share: a single event
+heap over
+
+* **arrivals**  — jobs (or serving requests) joining the admission queue,
+* **finishes**  — a device run completing (done / OOM / early restart),
+* **reconfig completions** — a partition fission/fusion or engine
+  migration becoming effective, and
+* **admission ticks** — policy-scheduled wakeups (the serving layer's
+  continuous-batching iteration boundaries).
+
+Policy/mechanism split (MISO, arXiv:2207.11428; optimal MIG placement,
+arXiv:2409.06646): the kernel owns time, the heap and the admission queue;
+a :class:`SchedulingPolicy` owns *what to start where* via small hooks
+(``dispatch`` / ``on_finish`` / ``on_tick`` / ...).  Adding a policy or a
+workload layer is a new policy class, not a new event loop.
+
+Determinism contract: events at equal times order FINISH < RECONFIG <
+ARRIVAL < TICK (a finish frees capacity before a simultaneous arrival is
+routed — the tie-break every legacy loop used), then by device index, then
+by submission sequence.  The kernel performs device operations in exactly
+the order the legacy loops did, which is what makes the golden parity
+tests (tests/test_kernel_parity.py) bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Iterable, Sequence
+
+FINISH = "finish"
+RECONFIG = "reconfig"
+ARRIVAL = "arrival"
+TICK = "tick"
+
+#: tie-break rank at equal event times; see module docstring.
+_PRIO = {FINISH: 0, RECONFIG: 1, ARRIVAL: 2, TICK: 3}
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    t: float
+    prio: int
+    sub: int    # device index for finishes; 0 otherwise
+    seq: int    # per-device run sequence for finishes, global otherwise
+    kind: str = dataclasses.field(compare=False)
+    payload: Any = dataclasses.field(compare=False, default=None)
+
+
+class SchedulingPolicy:
+    """What to start where.  Subclass and override the hooks you need.
+
+    ``online=False`` policies (batch schedulers) receive every job in the
+    kernel queue up front regardless of ``arrival``; ``online=True``
+    policies see jobs with ``arrival > 0`` only when their ARRIVAL event
+    fires — exactly the legacy scheme-B/fleet admission semantics.
+    """
+
+    name = "policy"
+    online = False
+
+    def on_init(self, kernel: "EventKernel", jobs: list) -> None:
+        """Called once before the loop, after the queue is seeded."""
+
+    def dispatch(self, kernel: "EventKernel") -> bool:
+        """Place queued work onto devices; return True if anything started."""
+        return False
+
+    def on_finish(self, kernel: "EventKernel", device, run) -> None:
+        """A device run completed (``run.plan.outcome`` says how)."""
+
+    def on_arrival(self, kernel: "EventKernel", item) -> None:
+        kernel.queue.append(item)
+
+    def on_reconfig(self, kernel: "EventKernel", payload) -> None:
+        """A scheduled reconfiguration (fission/fusion, migration) landed."""
+
+    def on_tick(self, kernel: "EventKernel", payload) -> None:
+        """A policy-scheduled admission tick fired."""
+
+    def on_stall(self, kernel: "EventKernel") -> None:
+        """Queue is non-empty, nothing could be placed, nothing is running.
+        Raise to abort (deadlock) or return to wait for a future event."""
+        head = kernel.queue[0]
+        raise RuntimeError(f"deadlock: cannot place "
+                           f"{getattr(head, 'name', head)!s}")
+
+    def result(self, kernel: "EventKernel", jobs: list):
+        """Build the run's metrics object after the heap drains."""
+        return None
+
+
+class EventKernel:
+    """One event heap, one clock, N devices, one pluggable policy.
+
+    A *device* is anything with ``name``, ``has_running``, ``advance_to(t)``
+    and — if the policy starts :class:`~repro.core.scheduler.job.Job` runs
+    on it — the :class:`~repro.core.scheduler.events.DeviceSim` surface
+    (``start`` / ``pop_next_finish``).  The serving layer plugs in its own
+    lighter device type and drives everything through ticks + reconfigs.
+    """
+
+    def __init__(self, devices: Sequence, policy: SchedulingPolicy) -> None:
+        if not devices:
+            raise ValueError("the kernel needs at least one device")
+        names = [d.name for d in devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device names: {names}")
+        self.devices = list(devices)
+        self.policy = policy
+        self.t = 0.0
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+        self._dev_index = {id(d): i for i, d in enumerate(self.devices)}
+        self.queue: list = []   # admitted, not yet placed
+
+    # -- event plumbing ----------------------------------------------------
+
+    def push(self, t: float, kind: str, payload: Any = None,
+             sub: int = 0, seq: int | None = None) -> Event:
+        ev = Event(t=t, prio=_PRIO[kind], sub=sub,
+                   seq=next(self._seq) if seq is None else seq,
+                   kind=kind, payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def schedule_tick(self, t: float, payload: Any = None) -> Event:
+        return self.push(t, TICK, payload)
+
+    def schedule_reconfig(self, t: float, payload: Any = None) -> Event:
+        return self.push(t, RECONFIG, payload)
+
+    def has_events(self, kind: str | None = None) -> bool:
+        if kind is None:
+            return bool(self._heap)
+        return any(ev.kind == kind for ev in self._heap)
+
+    # -- device runs -------------------------------------------------------
+
+    def start(self, device, job, partition, setup_s: float = 0.0):
+        """Start ``job`` on ``device`` and register its finish event."""
+        run = device.start(job, partition, setup_s=setup_s)
+        self.push(run.t_end, FINISH, device,
+                  sub=self._dev_index[id(device)], seq=run.seq)
+        return run
+
+    # -- the loop ----------------------------------------------------------
+
+    def _any_running(self) -> bool:
+        return any(d.has_running for d in self.devices)
+
+    def _advance_all(self) -> None:
+        for dev in self.devices:
+            dev.advance_to(self.t)
+
+    def run(self, jobs: Iterable):
+        jobs = list(jobs)
+        names = [getattr(j, "name", None) for j in jobs]
+        if len(set(names)) != len(names):
+            # completion/turnaround accounting is keyed by name; duplicates
+            # would silently overwrite each other instead of failing loudly
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate job names: {dupes[:5]}")
+        if self.policy.online:
+            for job in sorted((j for j in jobs if j.arrival > 0.0),
+                              key=lambda j: j.arrival):
+                self.push(job.arrival, ARRIVAL, job)
+            self.queue = [j for j in jobs if j.arrival <= 0.0]
+        else:
+            self.queue = list(jobs)
+        self.policy.on_init(self, jobs)
+
+        while True:
+            progressed = self.policy.dispatch(self)
+            if self.queue and not progressed and not self._any_running():
+                self.policy.on_stall(self)
+            if not self._heap:
+                break
+            ev = heapq.heappop(self._heap)
+            self.t = ev.t
+            if ev.kind == FINISH:
+                run = ev.payload.pop_next_finish()   # advances that device
+                self._advance_all()                  # idle-advance the rest
+                self.policy.on_finish(self, ev.payload, run)
+            elif ev.kind == ARRIVAL:
+                self._advance_all()
+                self.policy.on_arrival(self, ev.payload)
+                # admit simultaneous arrivals together, as the legacy loops
+                # did (`arrival <= t + eps`): dispatching between two
+                # tied arrivals would let a consolidating policy gate a
+                # device for zero seconds and charge a spurious wake
+                while (self._heap and self._heap[0].kind == ARRIVAL
+                       and self._heap[0].t <= ev.t + 1e-12):
+                    self.policy.on_arrival(
+                        self, heapq.heappop(self._heap).payload)
+            elif ev.kind == RECONFIG:
+                self._advance_all()
+                self.policy.on_reconfig(self, ev.payload)
+            else:  # TICK
+                self._advance_all()
+                self.policy.on_tick(self, ev.payload)
+
+        return self.policy.result(self, jobs)

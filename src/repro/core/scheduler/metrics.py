@@ -1,0 +1,111 @@
+"""Shared metrics for every simulation layer.
+
+One module holds the result records of all three simulation surfaces —
+per-device batch metrics (:class:`Metrics`), fleet aggregates
+(:class:`FleetMetrics`) and the helpers the request-level serving layer
+builds its SLO metrics from — so a new policy or workload never grows its
+own bookkeeping variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class RunRecord:
+    job: str
+    profile: str
+    start: float
+    end: float
+    outcome: str
+    compute_fraction: float
+    mem_gb: float
+    wasted_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class Metrics:
+    """One device's batch-scheduling outcome (paper Fig. 4 axes)."""
+
+    policy: str
+    n_jobs: int
+    makespan: float
+    energy_j: float
+    mem_util: float            # time-averaged used-mem / device-mem
+    mean_turnaround: float
+    n_oom: int
+    n_early_restarts: int
+    n_reconfigs: int
+    wasted_seconds: float
+    records: list[RunRecord]
+    device: str = ""
+
+    @property
+    def throughput(self) -> float:
+        return self.n_jobs / max(self.makespan, 1e-9)
+
+    @property
+    def energy_per_job(self) -> float:
+        return self.energy_j / max(self.n_jobs, 1)
+
+    def summary(self) -> str:
+        return (f"{self.policy}: jobs={self.n_jobs} makespan={self.makespan:.1f}s "
+                f"thpt={self.throughput:.4f}/s energy={self.energy_j / 1e3:.1f}kJ "
+                f"mem_util={self.mem_util:.2%} turnaround={self.mean_turnaround:.1f}s "
+                f"oom={self.n_oom} early={self.n_early_restarts} "
+                f"reconf={self.n_reconfigs}")
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    policy: str
+    fleet: str
+    n_jobs: int
+    makespan: float
+    energy_j: float
+    gated_seconds: float
+    idle_joules_avoided: float
+    mean_jct: float            # completion - arrival, averaged
+    n_oom: int
+    n_early_restarts: int
+    n_reconfigs: int
+    wasted_seconds: float
+    per_device: list[Metrics]
+    records: list[tuple[str, RunRecord]]   # (device, record)
+
+    @property
+    def throughput(self) -> float:
+        return self.n_jobs / max(self.makespan, 1e-9)
+
+    @property
+    def energy_per_job(self) -> float:
+        return self.energy_j / max(self.n_jobs, 1)
+
+    def summary(self) -> str:
+        return (f"{self.policy} on [{self.fleet}]: jobs={self.n_jobs} "
+                f"makespan={self.makespan:.1f}s "
+                f"thpt={self.throughput:.4f}/s "
+                f"energy={self.energy_j / 1e3:.1f}kJ "
+                f"({self.energy_per_job:.0f}J/job) "
+                f"gated={self.gated_seconds:.0f}s "
+                f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
+                f"early={self.n_early_restarts} reconf={self.n_reconfigs}")
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default), dependency-free so
+    the serving SLO metrics stay importable without the array stack."""
+    if not values:
+        return math.nan
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * q / 100.0
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    if lo == hi:
+        return xs[lo]
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)

@@ -28,19 +28,13 @@ class FleetEnergyIntegrator:
     """Charges idle power only to non-gated devices.
 
     The mechanism is per-device: a gated :class:`DeviceSim` integrates at
-    ``p_gated_w`` instead of ``p_idle_w``.  This aggregator advances every
-    device to a common timestamp (so fleet totals are well-defined) and
-    sums/attributes the result.
+    ``p_gated_w`` instead of ``p_idle_w``, and the event kernel advances
+    every device to each event's timestamp (so fleet totals are
+    well-defined).  This aggregator sums/attributes the result.
     """
 
     def __init__(self, devices: Sequence[DeviceSim]) -> None:
         self.devices = list(devices)
-
-    def advance_all(self, t: float) -> None:
-        """Idle-advance every device's integral to fleet time ``t`` (devices
-        with a finish event at ``t`` were already advanced by their pop)."""
-        for dev in self.devices:
-            dev.advance_to(t)
 
     @property
     def joules(self) -> float:

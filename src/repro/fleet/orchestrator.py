@@ -1,30 +1,33 @@
 """The fleet orchestrator: one admission queue over N device simulators.
 
-Event loop (discrete-event, deterministic):
+The fleet is a :class:`~repro.core.scheduler.kernel.EventKernel` policy —
+the same event heap that drives the single-device batch schedulers also
+drives N devices here:
 
-1. admit arrivals whose time has come into the global FIFO queue,
+1. ARRIVAL events admit jobs into the global FIFO queue,
 2. dispatch: for each queued job, ask the router to rank the feasible
    devices and commit to the first whose placement ladder succeeds
-   (waking a power-gated device costs ``wake_latency_s``),
+   (waking a power-gated device costs ``wake_latency_s``); FIFO with
+   backfill — an unplaceable head must not starve jobs behind it,
 3. for consolidation routers, power-gate devices left fully idle,
-4. advance fleet time to the next event (earliest device finish or next
-   arrival); OOM/early-restart outcomes update the job's memory estimate
-   and requeue it at the front — possibly migrating it to a bigger device
-   (an A100 job that outgrows 40GB restarts on an H100).
+4. FINISH events advance the fleet clock; OOM/early-restart outcomes
+   update the job's memory estimate and requeue it at the front —
+   possibly migrating it to a bigger device (an A100 job that outgrows
+   40GB restarts on an H100).
 
 Every device keeps its own clock, reconfiguration cost and energy
-integral; the orchestrator only ever moves them forward together, so fleet
+integral; the kernel only ever moves them forward together, so fleet
 totals (makespan, Joules) are well-defined.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Iterable, Sequence
 
-from repro.core.scheduler.events import (EARLY_RESTART, OOM, DeviceSim,
-                                         Metrics, RunRecord)
+from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
 from repro.core.scheduler.job import Job
+from repro.core.scheduler.kernel import (EventKernel, SchedulingPolicy)
+from repro.core.scheduler.metrics import FleetMetrics
 from repro.fleet.energy import FleetEnergyIntegrator
 from repro.fleet.router import Router
 
@@ -33,44 +36,98 @@ from repro.fleet.router import Router
 WAKE_LATENCY_S = 1.5
 
 
-@dataclasses.dataclass
-class FleetMetrics:
-    policy: str
-    fleet: str
-    n_jobs: int
-    makespan: float
-    energy_j: float
-    gated_seconds: float
-    idle_joules_avoided: float
-    mean_jct: float            # completion - arrival, averaged
-    n_oom: int
-    n_early_restarts: int
-    n_reconfigs: int
-    wasted_seconds: float
-    per_device: list[Metrics]
-    records: list[tuple[str, RunRecord]]   # (device, record)
+class FleetPolicy(SchedulingPolicy):
+    """Router-driven dispatch over N devices, as a kernel policy."""
 
-    @property
-    def throughput(self) -> float:
-        return self.n_jobs / max(self.makespan, 1e-9)
+    online = True
 
-    @property
-    def energy_per_job(self) -> float:
-        return self.energy_j / max(self.n_jobs, 1)
+    def __init__(self, router: Router, wake_latency_s: float = WAKE_LATENCY_S,
+                 energy: FleetEnergyIntegrator | None = None) -> None:
+        self.router = router
+        self.wake_latency_s = wake_latency_s
+        self.energy = energy
+        self.name = router.name
 
-    def summary(self) -> str:
-        return (f"{self.policy} on [{self.fleet}]: jobs={self.n_jobs} "
-                f"makespan={self.makespan:.1f}s "
-                f"thpt={self.throughput:.4f}/s "
-                f"energy={self.energy_j / 1e3:.1f}kJ "
-                f"({self.energy_per_job:.0f}J/job) "
-                f"gated={self.gated_seconds:.0f}s "
-                f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
-                f"early={self.n_early_restarts} reconf={self.n_reconfigs}")
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
+        for dev in self.router.rank(job, kernel.devices):
+            placed = dev.try_place(job)
+            if placed is None:
+                continue
+            part, setup = placed
+            if dev.gated:
+                dev.ungate()
+                setup += self.wake_latency_s
+            kernel.start(dev, job, part, setup_s=setup)
+            return True
+        return False
+
+    def dispatch(self, kernel: EventKernel) -> bool:
+        placed: set[int] = set()
+        for job in kernel.queue:
+            if self._dispatch_one(kernel, job):
+                # filter by identity: Job is a value-equality dataclass, so
+                # list.remove could drop an equal-but-different job
+                placed.add(id(job))
+        if placed:
+            kernel.queue[:] = [j for j in kernel.queue
+                               if id(j) not in placed]
+        if self.router.consolidates:
+            for dev in kernel.devices:
+                if not dev.gated and not dev.has_running:
+                    dev.gate()
+        return bool(placed)
+
+    # -- events ------------------------------------------------------------
+
+    def on_finish(self, kernel: EventKernel, dev: DeviceSim, run) -> None:
+        if run.plan.outcome in (OOM, EARLY_RESTART):
+            run.job.est_mem_gb = run.plan.new_est_mem_gb
+            kernel.queue.insert(0, run.job)   # restart: earliest arrival
+
+    def on_stall(self, kernel: EventKernel) -> None:
+        if kernel.has_events():
+            return   # a future arrival (or reconfig) may unblock the queue
+        worst = kernel.queue[0]
+        raise RuntimeError(
+            f"deadlock: {worst.name} "
+            f"(est {worst.est_mem_gb}GB) fits no device in "
+            f"[{', '.join(d.name for d in kernel.devices)}]")
+
+    # -- reporting ---------------------------------------------------------
+
+    def result(self, kernel: EventKernel, jobs: list) -> FleetMetrics:
+        energy = self.energy or FleetEnergyIntegrator(kernel.devices)
+        arrival_of = {j.name: j.arrival for j in jobs}
+        completions: dict[str, float] = {}
+        for dev in kernel.devices:
+            completions.update(dev.finished)
+        jcts = [completions[name] - arrival_of[name]
+                for name in completions]
+        per_device = [dev.metrics(len(dev.finished))
+                      for dev in kernel.devices]
+        records = [(dev.name, rec) for dev in kernel.devices
+                   for rec in dev.records]
+        records.sort(key=lambda dr: dr[1].start)
+        return FleetMetrics(
+            policy=self.router.name,
+            fleet=", ".join(d.name for d in kernel.devices),
+            n_jobs=len(jobs), makespan=max(kernel.t, 1e-9),
+            energy_j=energy.joules,
+            gated_seconds=energy.gated_seconds,
+            idle_joules_avoided=energy.idle_joules_avoided,
+            mean_jct=sum(jcts) / max(len(jcts), 1),
+            n_oom=sum(d.n_oom for d in kernel.devices),
+            n_early_restarts=sum(d.n_early for d in kernel.devices),
+            n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices),
+            wasted_seconds=sum(d.wasted for d in kernel.devices),
+            per_device=per_device, records=records)
 
 
 class FleetOrchestrator:
-    """Owns the devices, the global queue and the fleet clock."""
+    """Owns the devices and the fleet-wide energy aggregation; ``run`` is a
+    thin kernel invocation with a :class:`FleetPolicy`."""
 
     def __init__(self, devices: Sequence[DeviceSim], router: Router,
                  wake_latency_s: float = WAKE_LATENCY_S) -> None:
@@ -83,116 +140,10 @@ class FleetOrchestrator:
         self.router = router
         self.wake_latency_s = wake_latency_s
         self.energy = FleetEnergyIntegrator(self.devices)
-        self.t = 0.0
-
-    # -- dispatch ----------------------------------------------------------
-
-    def _dispatch_one(self, job: Job) -> bool:
-        for dev in self.router.rank(job, self.devices):
-            placed = dev.try_place(job)
-            if placed is None:
-                continue
-            part, setup = placed
-            if dev.gated:
-                dev.ungate()
-                setup += self.wake_latency_s
-            dev.start(job, part, setup_s=setup)
-            return True
-        return False
-
-    def _dispatch(self, queue: list[Job]) -> None:
-        """FIFO with backfill: an unplaceable head must not starve jobs
-        behind it that still fit somewhere right now."""
-        placed: set[int] = set()
-        for job in queue:
-            if self._dispatch_one(job):
-                # filter by identity: Job is a value-equality dataclass, so
-                # list.remove could drop an equal-but-different job
-                placed.add(id(job))
-        queue[:] = [j for j in queue if id(j) not in placed]
-
-    def _gate_idle(self) -> None:
-        for dev in self.devices:
-            if not dev.gated and not dev.has_running:
-                dev.gate()
-
-    # -- the event loop ----------------------------------------------------
 
     def run(self, jobs: Iterable[Job]) -> FleetMetrics:
-        jobs = list(jobs)
-        names = [j.name for j in jobs]
-        if len(set(names)) != len(names):
-            # completion/JCT accounting is keyed by name; duplicates would
-            # silently overwrite each other instead of failing loudly
-            dupes = sorted({n for n in names if names.count(n) > 1})
-            raise ValueError(f"duplicate job names: {dupes[:5]}")
-        arrival_of = {j.name: j.arrival for j in jobs}
-        pending = sorted((j for j in jobs if j.arrival > 0.0),
-                         key=lambda j: j.arrival)
-        queue: list[Job] = [j for j in jobs if j.arrival <= 0.0]
-
-        while True:
-            while pending and pending[0].arrival <= self.t + 1e-12:
-                queue.append(pending.pop(0))
-            self._dispatch(queue)
-            if self.router.consolidates:
-                self._gate_idle()
-
-            running = [d for d in self.devices if d.has_running]
-            next_finish = min((d.next_finish_time for d in running),
-                              default=None)
-            next_arrival = pending[0].arrival if pending else None
-            if next_finish is None and next_arrival is None:
-                if queue:
-                    worst = queue[0]
-                    raise RuntimeError(
-                        f"deadlock: {worst.name} "
-                        f"(est {worst.est_mem_gb}GB) fits no device in "
-                        f"[{', '.join(d.name for d in self.devices)}]")
-                break
-
-            if next_finish is None or (next_arrival is not None
-                                       and next_arrival < next_finish):
-                self.t = next_arrival
-                self.energy.advance_all(self.t)
-                continue
-
-            dev = min(running, key=lambda d: d.next_finish_time)
-            run = dev.pop_next_finish()       # advances dev's clock
-            self.t = run.t_end
-            self.energy.advance_all(self.t)   # idle-advance the others
-            if run.plan.outcome in (OOM, EARLY_RESTART):
-                run.job.est_mem_gb = run.plan.new_est_mem_gb
-                queue.insert(0, run.job)      # restart: earliest arrival
-
-        return self._metrics(jobs, arrival_of)
-
-    # -- reporting ---------------------------------------------------------
-
-    def _metrics(self, jobs: list[Job],
-                 arrival_of: dict[str, float]) -> FleetMetrics:
-        completions: dict[str, float] = {}
-        for dev in self.devices:
-            completions.update(dev.finished)
-        jcts = [completions[name] - arrival_of[name]
-                for name in completions]
-        per_device = [dev.metrics(len(dev.finished)) for dev in self.devices]
-        records = [(dev.name, rec) for dev in self.devices
-                   for rec in dev.records]
-        records.sort(key=lambda dr: dr[1].start)
-        return FleetMetrics(
-            policy=self.router.name,
-            fleet=", ".join(d.name for d in self.devices),
-            n_jobs=len(jobs), makespan=max(self.t, 1e-9),
-            energy_j=self.energy.joules,
-            gated_seconds=self.energy.gated_seconds,
-            idle_joules_avoided=self.energy.idle_joules_avoided,
-            mean_jct=sum(jcts) / max(len(jcts), 1),
-            n_oom=sum(d.n_oom for d in self.devices),
-            n_early_restarts=sum(d.n_early for d in self.devices),
-            n_reconfigs=sum(d.pm.n_reconfigs for d in self.devices),
-            wasted_seconds=sum(d.wasted for d in self.devices),
-            per_device=per_device, records=records)
+        policy = FleetPolicy(self.router, self.wake_latency_s, self.energy)
+        return EventKernel(self.devices, policy).run(jobs)
 
 
 def run_fleet(devices: Sequence[DeviceSim], router: Router,

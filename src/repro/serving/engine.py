@@ -58,18 +58,25 @@ class ServeEngine:
         self.params = params
         self.ecfg = engine_cfg
         self.backend = backend
-        self.accountant = MemoryAccountant()
-        self.predictor = PeakMemoryPredictor(
-            max_iter=engine_cfg.max_context)
+        self._reset_run_state()
         self._params_bytes = pytree_nbytes(params)
         self._decode = jax.jit(
             lambda p, t, i, c: registry.decode_step(p, cfg, t, i, c))
+
+    def _reset_run_state(self) -> None:
+        """Fresh per-run accounting: a second batch on the same engine must
+        not inherit the previous run's live watermark (it would record a
+        bogus first-iteration allocation) nor its converged predictor."""
+        self.accountant = MemoryAccountant()
+        self.predictor = PeakMemoryPredictor(max_iter=self.ecfg.max_context)
+        self._last_live = 0.0
 
     # -- serving loop ------------------------------------------------------------
 
     def run(self, requests: list[Request]) -> list[Request]:
         cfg, ecfg = self.cfg, self.ecfg
         assert len(requests) <= ecfg.max_batch
+        self._reset_run_state()
         b = len(requests)
         prompt_len = max(len(r.prompt) for r in requests)
         caches = registry.init_caches(cfg, b, ecfg.max_context)
@@ -127,8 +134,7 @@ class ServeEngine:
         live = self._live_bytes(caches, upto)
         churn = 2 * self.cfg.d_model * max(self.cfg.d_ff, self.cfg.d_model) \
             * 2e-3 + live * 0.01
-        self.accountant.note_alloc(churn + max(
-            0.0, live - getattr(self, "_last_live", 0.0)))
+        self.accountant.note_alloc(churn + max(0.0, live - self._last_live))
         self.accountant.note_live(live)
         self._last_live = live
         self.accountant.end_iteration()

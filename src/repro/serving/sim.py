@@ -1,0 +1,686 @@
+"""Request-level LLM serving simulation on the unified event kernel.
+
+The paper's headline LLM result (1.43x throughput, 1.11x energy) comes
+from *serving* workloads whose memory grows with the KV cache — the
+dynamic-memory regime the peak predictor and the fission/fusion machinery
+target.  This module simulates that regime at request granularity:
+
+* requests arrive open-loop (Poisson) with prompt/decode lengths drawn
+  from seeded heavy-tailed distributions,
+* each MIG partition hosts a continuous-batching engine: admitted
+  requests prefill, then decode one token per engine iteration; iteration
+  latency scales with the slice's compute fraction and the batch size,
+* per-iteration KV-cache growth feeds the same
+  :class:`~repro.core.memory.timeseries.PeakMemoryPredictor` the batch
+  scheduler uses; when the converged prediction exceeds the partition the
+  engine *early-restarts* onto a larger slice
+  (:func:`~repro.core.restart.early_restart_target` + partition
+  fission/fusion through the shared :class:`PartitionManager`), paying a
+  reconfiguration + KV-rebuild (re-prefill) cost instead of crashing
+  mid-iteration and losing work,
+* SLO metrics come out the other end: TTFT, TPOT, p99 end-to-end
+  latency and goodput (SLO-attaining requests per second), next to the
+  energy integral — so fusion/fission and early restart are evaluated
+  against serving SLOs, not just makespan.
+
+Everything is driven by :class:`~repro.core.scheduler.kernel.EventKernel`
+events — ARRIVAL for requests, TICK for engine iteration boundaries,
+RECONFIG for migration completions — the same heap the batch policies and
+the fleet use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.memory.timeseries import PeakMemoryPredictor
+from repro.core.partition_manager import Partition, PartitionManager
+from repro.core.partition_state import PartitionProfile
+from repro.core.restart import oom_restart_target
+from repro.core.scheduler.energy import EnergyIntegrator
+from repro.core.scheduler.job import GB
+from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
+from repro.core.scheduler.metrics import percentile
+from repro.fleet.devices import DEVICE_CATALOGUE
+
+MB = 1024 ** 2
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingRequest:
+    rid: int
+    arrival: float
+    prompt_tokens: int
+    decode_tokens: int
+    # runtime state
+    generated: int = 0
+    in_prefill: bool = True
+    t_first_token: float | None = None
+    t_done: float | None = None
+    dropped: bool = False
+    n_preemptions: int = 0
+
+    @property
+    def name(self) -> str:            # kernel admission bookkeeping
+        return f"req{self.rid}"
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def kv_tokens(self) -> int:
+        """Tokens whose KV the engine holds for this request."""
+        return self.prompt_tokens + self.generated
+
+    @property
+    def ttft(self) -> float:
+        assert self.t_first_token is not None
+        return self.t_first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        assert self.t_done is not None
+        return self.t_done - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        assert self.t_done is not None and self.t_first_token is not None
+        return ((self.t_done - self.t_first_token)
+                / max(self.decode_tokens - 1, 1))
+
+
+def poisson_requests(n: int, rate_per_s: float, seed: int = 0,
+                     median_prompt: int = 256, median_decode: int = 160,
+                     sigma_prompt: float = 0.6, sigma_decode: float = 0.8,
+                     max_tokens: int = 4096) -> list[ServingRequest]:
+    """Open-loop Poisson arrivals with log-normal (heavy-tailed) prompt and
+    decode lengths — the shape production serving traces report (ShareGPT /
+    Azure LLM traces: most requests short, a long decode tail).
+
+    ``median_*`` are the lognormal *medians* (mu = log(median)); the means
+    sit a factor exp(sigma^2 / 2) above them — size offered load from the
+    mean, ``median * exp(sigma**2 / 2) * rate_per_s`` tokens/s."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate_per_s))
+        prompt = int(np.clip(
+            rng.lognormal(np.log(median_prompt), sigma_prompt),
+            8, max_tokens))
+        decode = int(np.clip(
+            rng.lognormal(np.log(median_decode), sigma_decode),
+            4, max_tokens))
+        reqs.append(ServingRequest(rid=i, arrival=t, prompt_tokens=prompt,
+                                   decode_tokens=decode))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Model + engine configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LLMServingModel:
+    """Latency/memory coefficients of the served model (full-device rates;
+    a slice with compute fraction ``c`` scales them by ``c``)."""
+
+    name: str = "qwen2-7b"
+    params_gb: float = 3.0             # weights resident per engine replica
+    #: full-attention 7B-class KV (2 * 32 layers * 32 heads * 128 dim * 2B)
+    kv_mb_per_token: float = 0.5
+    activations_gb: float = 0.4        # workspace + activation churn
+    prefill_tokens_per_s: float = 24000.0
+    decode_step_fixed_s: float = 0.009
+    decode_step_per_seq_s: float = 0.0011
+
+    def kv_bytes(self, tokens: int) -> float:
+        return tokens * self.kv_mb_per_token * MB
+
+    def base_bytes(self) -> float:
+        return (self.params_gb + self.activations_gb) * GB
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """One serving policy configuration.
+
+    ``policy``:
+      * ``"full"``    — one engine on the whole device (no MIG),
+      * ``"static"``  — ``n_engines`` fixed slices; on memory pressure the
+        engine preempts (evicts + later re-prefills) requests, vLLM-style,
+      * ``"dynamic"`` — engines start on the smallest feasible slice and
+        grow via partition fission/fusion; with ``use_prediction`` the
+        predictor early-restarts them *before* the crash (paper §2.3),
+        without it they grow only after OOM crashes.
+    """
+
+    policy: str = "dynamic"
+    n_engines: int = 2
+    max_batch: int = 24
+    #: admission is optimistic (vLLM-style): a request is admitted when its
+    #: *current* KV fits — subsequent decode growth is exactly the dynamic
+    #: memory the predictor/fission machinery must then absorb
+    admit_frac: float = 0.98
+    use_prediction: bool = True
+    predict_lookahead: int = 96        # predictor horizon, engine iterations
+    crash_penalty_s: float = 2.0       # engine crash + reload after an OOM
+    #: compute share an engine asks for when growing — a soft constraint
+    #: (paper §4.3): without it Hopper's 1g.20gb profile traps a memory-
+    #: hungry engine at 1/7 compute forever
+    engine_compute_demand: float = 0.5
+    #: dynamic engines also fuse up after this many consecutive iterations
+    #: with requests still waiting (compute starvation shows up as queueing
+    #: long before the KV cache fills a high-memory slice); 0 disables
+    scale_up_queue_ticks: int = 20
+    slo_ttft_s: float = 6.0
+    slo_tpot_s: float = 0.30
+
+    @property
+    def name(self) -> str:
+        if self.policy != "dynamic":
+            return self.policy
+        return "dynamic" + ("+pred" if self.use_prediction else "")
+
+
+# ---------------------------------------------------------------------------
+# Devices and engines
+# ---------------------------------------------------------------------------
+
+class ServingDevice:
+    """A MIG device hosting serving engines: partition FSM + energy
+    integral, satisfying the kernel's device surface (``name`` /
+    ``has_running`` / ``advance_to``)."""
+
+    def __init__(self, model: str, name: str | None = None) -> None:
+        try:
+            backend_cls, power, reconfig_s = DEVICE_CATALOGUE[model]
+        except KeyError:
+            raise ValueError(f"unknown device model {model!r}; "
+                             f"known: {sorted(DEVICE_CATALOGUE)}") from None
+        self.model = model
+        self.name = name or model
+        self.backend = backend_cls()
+        self.pm = PartitionManager(self.backend)
+        self.energy = EnergyIntegrator(power)
+        self.reconfig_s = reconfig_s
+        self.t = 0.0
+        self.engines: list["EngineSim"] = []
+
+    def _active_util(self) -> float:
+        return sum(e.util() for e in self.engines)
+
+    @property
+    def has_running(self) -> bool:
+        return any(e.busy or e.waiting for e in self.engines)
+
+    def advance_to(self, t: float) -> None:
+        if t > self.t:
+            self.energy.advance(t, self._active_util())
+            self.t = t
+
+    def sync(self) -> None:
+        """Re-latch the utilization after engine state changed at time t."""
+        self.energy.advance(self.t, self._active_util())
+
+
+class EngineSim:
+    """A continuous-batching engine bound to one partition of a device."""
+
+    def __init__(self, device: ServingDevice, partition: Partition,
+                 model: LLMServingModel, cfg: ServingConfig,
+                 eid: int) -> None:
+        self.device = device
+        self.partition = partition
+        partition.busy = True
+        self.model = model
+        self.cfg = cfg
+        self.eid = eid
+        self.running: list[ServingRequest] = []
+        self.waiting: list[ServingRequest] = []
+        self.migrating = False
+        self._tick_pending = False
+        self._requested_cum = 0.0
+        self.predictor = self._fresh_predictor()
+        self.n_oom = 0
+        self.n_early = 0
+        self.n_preemptions = 0
+        self.n_dropped = 0
+        self.n_scaleups = 0
+        self._pressure_ticks = 0
+        self._grow_cooldown = 0
+
+    # -- state helpers -----------------------------------------------------
+
+    def _fresh_predictor(self) -> PeakMemoryPredictor:
+        return PeakMemoryPredictor(max_iter=self.cfg.predict_lookahead)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.running) or self.migrating
+
+    @property
+    def compute(self) -> float:
+        return self.partition.profile.compute_fraction
+
+    @property
+    def part_bytes(self) -> float:
+        return self.partition.profile.mem_gb * GB
+
+    def util(self) -> float:
+        return self.compute if self.busy else 0.0
+
+    def load(self) -> int:
+        return len(self.running) + len(self.waiting)
+
+    def live_bytes(self, extra_tokens: int = 0) -> float:
+        tokens = sum(r.kv_tokens for r in self.running) + extra_tokens
+        return self.model.base_bytes() + self.model.kv_bytes(tokens)
+
+    # -- queue interface ---------------------------------------------------
+
+    def enqueue(self, kernel: EventKernel, req: ServingRequest) -> None:
+        self.waiting.append(req)
+        if not self.migrating and not self._tick_pending:
+            self._admit(kernel)
+            self._schedule_tick(kernel)
+
+    def _admit(self, kernel: EventKernel) -> None:
+        budget = self.cfg.admit_frac * self.part_bytes
+        while self.waiting and len(self.running) < self.cfg.max_batch:
+            nxt = self.waiting[0]
+            if self.live_bytes(extra_tokens=nxt.kv_tokens) > budget:
+                if not self.running:
+                    # this request alone cannot fit the current slice: grow,
+                    # or reject it if the engine cannot
+                    if (self._can_grow()
+                            and self._begin_migration(kernel, crashed=False)):
+                        break
+                    self.waiting.pop(0)
+                    nxt.dropped = True
+                    self.n_dropped += 1
+                    continue
+                break
+            nxt.in_prefill = True
+            self.running.append(self.waiting.pop(0))
+
+    def _schedule_tick(self, kernel: EventKernel) -> None:
+        if self._tick_pending or self.migrating or not self.running:
+            return
+        c = max(self.compute, 1e-6)
+        prefill_tokens = sum(r.kv_tokens for r in self.running
+                             if r.in_prefill)
+        dt = (prefill_tokens / (self.model.prefill_tokens_per_s * c)
+              + (self.model.decode_step_fixed_s
+                 + len(self.running) * self.model.decode_step_per_seq_s) / c)
+        self._tick_pending = True
+        kernel.schedule_tick(kernel.t + dt, self)
+
+    # -- one engine iteration ---------------------------------------------
+
+    def step(self, kernel: EventKernel) -> None:
+        self._tick_pending = False
+        if self._grow_cooldown > 0:
+            self._grow_cooldown -= 1
+        # the iteration that just ran appends one token per sequence; check
+        # whether its KV allocations actually fit *before* crediting them
+        grew = sum(1 for r in self.running if not r.in_prefill) \
+            + sum(r.kv_tokens for r in self.running if r.in_prefill)
+        live_after = self.live_bytes(
+            extra_tokens=sum(1 for r in self.running if not r.in_prefill))
+        if live_after > self.part_bytes:
+            self.n_oom += 1
+            if not (self._can_grow()
+                    and self._begin_migration(kernel, crashed=True)):
+                self._preempt_until_fits()
+                # preemption may have evicted the whole batch; re-admit (or
+                # drop requests that no longer fit alone) so the evicted
+                # work cannot strand in `waiting` with no tick scheduled
+                self._admit(kernel)
+            self._schedule_tick(kernel)   # no-op while migrating
+            self.device.sync()
+            return
+
+        # credit the iteration
+        t = kernel.t
+        finished: list[ServingRequest] = []
+        for r in self.running:
+            if r.in_prefill:
+                r.in_prefill = False
+                if r.t_first_token is None:
+                    r.t_first_token = t
+                r.generated += 1
+            else:
+                r.generated += 1
+            if r.generated >= r.decode_tokens:
+                r.t_done = t
+                finished.append(r)
+        for r in finished:
+            self.running.remove(r)
+
+        # allocator statistics -> the paper's time-series predictor
+        self._requested_cum += (self.model.kv_bytes(grew)
+                                + 0.02 * self.model.activations_gb * GB)
+        live_now = self.live_bytes()
+        pred = self.predictor.observe(
+            self._requested_cum + self.model.base_bytes(),
+            min((live_now) / max(self._requested_cum
+                                 + self.model.base_bytes(), 1.0), 1.0))
+        if (self.cfg.use_prediction and self.running
+                and self.predictor.will_oom(self.part_bytes, pred)
+                and self._can_grow()
+                and self._begin_migration(
+                    kernel, crashed=False,
+                    predicted_gb=pred.peak_mem_bytes / GB)):
+            self.n_early += 1
+            self.device.sync()
+            return
+
+        self._admit(kernel)
+        # compute pressure: the queue is not draining on this slice
+        self._pressure_ticks = self._pressure_ticks + 1 if self.waiting else 0
+        if (0 < self.cfg.scale_up_queue_ticks <= self._pressure_ticks
+                and self._can_grow()):
+            self._pressure_ticks = 0
+            if self._begin_migration(kernel, crashed=False):
+                self.n_scaleups += 1
+                self.device.sync()
+                return
+        self._schedule_tick(kernel)
+        self.device.sync()
+
+    # -- memory pressure paths --------------------------------------------
+
+    def _preempt_until_fits(self) -> None:
+        """Static policy: evict the youngest sequences (KV dropped, tokens
+        kept) until the batch fits; they re-prefill on readmission."""
+        budget = self.cfg.admit_frac * self.part_bytes
+        while self.running and self.live_bytes(
+                extra_tokens=len(self.running)) > budget:
+            victim = self.running.pop()          # LIFO: youngest first
+            victim.in_prefill = True             # must rebuild its KV
+            victim.n_preemptions += 1
+            self.n_preemptions += 1
+            self.waiting.insert(0, victim)
+
+    def _can_grow(self) -> bool:
+        if self.cfg.policy != "dynamic" or self._grow_cooldown > 0:
+            return False
+        return self.device.backend.next_larger_profile(
+            self.partition.profile) is not None
+
+    def _grow_candidates(self, predicted_gb: float | None
+                         ) -> list[PartitionProfile]:
+        """Larger profiles to try, preferred first.  Memory need comes from
+        the predictor (early restart) or the next-larger ladder rung (OOM
+        restart, paper's 10GB->20GB example); compute is the paper's soft
+        constraint — prefer slices that also relieve decode starvation, but
+        degrade down the compute tiers rather than fail (a fragmented FSM
+        often cannot host the compute-maximal placement)."""
+        backend = self.device.backend
+        cur = self.partition.profile
+        nxt = oom_restart_target(backend, cur)
+        need_gb = min(max(predicted_gb or 0.0, nxt.mem_gb),
+                      backend.profiles[-1].mem_gb)
+        bigger = [p for p in backend.profiles
+                  if p.mem_gb > cur.mem_gb and p.mem_gb >= need_gb]
+        want_c = self.cfg.engine_compute_demand
+        rank = lambda p: (p.mem_gb, -p.compute_fraction)
+        strong = sorted((p for p in bigger
+                         if p.compute_fraction >= want_c), key=rank)
+        weak = sorted((p for p in bigger
+                       if p.compute_fraction < want_c), key=rank)
+        return strong + weak or [nxt]
+
+    def _begin_migration(self, kernel: EventKernel, crashed: bool,
+                         predicted_gb: float | None = None) -> bool:
+        """Checkpointless restart onto a larger slice: release the current
+        partition, fuse/fission idle space into the target profile, pay the
+        reconfiguration plus the KV rebuild (re-prefill of every in-flight
+        sequence) — and a crash penalty if this is a post-OOM restart.
+        Returns False (engine unchanged) when neighbours hold the space."""
+        dev = self.device
+        old_profile = self.partition.profile
+        n_reconfigs_before = dev.pm.n_reconfigs
+        dev.pm.release(self.partition)
+        part = None
+        for target in self._grow_candidates(predicted_gb):
+            part = (dev.pm.allocate(target)
+                    or dev.pm.allocate_with_reshape(target))
+            if part is not None:
+                break
+        if part is None:
+            # neighbours hold the space: stay on the old profile (a failed
+            # probe is a no-op on the device — don't count the restore as a
+            # reconfiguration), back off, and let the caller shed load
+            part = (dev.pm.allocate(old_profile)
+                    or dev.pm.allocate_with_reshape(old_profile))
+            assert part is not None, "restoring the engine slice must succeed"
+            dev.pm.n_reconfigs = n_reconfigs_before
+            self.partition = part
+            part.busy = True
+            self._grow_cooldown = max(self.cfg.scale_up_queue_ticks, 10)
+            return False
+        self.partition = part
+        part.busy = True
+        for r in self.running:
+            r.in_prefill = True              # KV is rebuilt on the new slice
+        rebuild_tokens = sum(r.kv_tokens for r in self.running)
+        c = max(self.compute, 1e-6)
+        dur = (dev.reconfig_s
+               + rebuild_tokens / (self.model.prefill_tokens_per_s * c)
+               + (self.cfg.crash_penalty_s if crashed else 0.0))
+        self.migrating = True
+        self._pressure_ticks = 0
+        self.predictor = self._fresh_predictor()
+        self._requested_cum = 0.0
+        kernel.schedule_reconfig(kernel.t + dur, self)
+        return True
+
+    def finish_migration(self, kernel: EventKernel) -> None:
+        t = kernel.t
+        self.migrating = False
+        finished = []
+        for r in self.running:
+            # the rebuild re-ran prefill — credit it exactly as step()
+            # credits a prefill iteration (the forward over the context
+            # emits the next token), so migration does not skew TTFT/TPOT
+            r.in_prefill = False
+            if r.t_first_token is None:
+                r.t_first_token = t
+            r.generated += 1
+            if r.generated >= r.decode_tokens:
+                r.t_done = t
+                finished.append(r)
+        for r in finished:
+            self.running.remove(r)
+        self._admit(kernel)
+        self._schedule_tick(kernel)
+        self.device.sync()
+
+
+# ---------------------------------------------------------------------------
+# The kernel policy: routing + engine lifecycle
+# ---------------------------------------------------------------------------
+
+class ServingPolicy(SchedulingPolicy):
+    """Route each arriving request to the least-loaded engine in the fleet;
+    engines then run themselves on TICK/RECONFIG events."""
+
+    online = True
+
+    def __init__(self, model: LLMServingModel, cfg: ServingConfig) -> None:
+        self.model = model
+        self.cfg = cfg
+        self.name = cfg.name
+        self.engines: list[EngineSim] = []
+
+    # -- engine construction ----------------------------------------------
+
+    def on_init(self, kernel: EventKernel, jobs: list) -> None:
+        eid = 0
+        for dev in kernel.devices:
+            for profile in self._initial_profiles(dev):
+                part = dev.pm.allocate(profile)
+                assert part is not None, (
+                    f"cannot carve {profile.name} on {dev.name}")
+                engine = EngineSim(dev, part, self.model, self.cfg, eid)
+                dev.engines.append(engine)
+                self.engines.append(engine)
+                eid += 1
+
+    def _initial_profiles(self, dev: ServingDevice) -> list[PartitionProfile]:
+        backend = dev.backend
+        if self.cfg.policy == "full":
+            return [backend.profiles[-1]]
+        if self.cfg.policy == "static":
+            share = backend.total_mem_gb() / self.cfg.n_engines
+            prof = backend.tightest_profile(share) or backend.profiles[-1]
+            return [prof] * self.cfg.n_engines
+        # dynamic: start on the smallest slice that holds the model at all
+        floor_gb = (self.model.params_gb + self.model.activations_gb) * 1.25
+        prof = backend.tightest_profile(floor_gb) or backend.profiles[-1]
+        return [prof] * self.cfg.n_engines
+
+    # -- request routing ---------------------------------------------------
+
+    def _feasible(self, engine: EngineSim, req: ServingRequest) -> bool:
+        """Whether this engine can EVER hold the request (the fleet batch
+        router's ``fits`` filter, lifted to serving): its prompt KV within
+        the largest slice the engine could grow to."""
+        if self.cfg.policy == "dynamic":
+            cap_gb = engine.device.backend.profiles[-1].mem_gb
+        else:
+            cap_gb = engine.partition.profile.mem_gb
+        return (self.model.base_bytes() + self.model.kv_bytes(req.kv_tokens)
+                <= self.cfg.admit_frac * cap_gb * GB)
+
+    def _route(self, kernel: EventKernel, req: ServingRequest) -> None:
+        feasible = [e for e in self.engines if self._feasible(e, req)]
+        engine = min(feasible or self.engines,
+                     key=lambda e: (e.load(), e.eid))
+        engine.enqueue(kernel, req)
+        engine.device.sync()
+
+    def dispatch(self, kernel: EventKernel) -> bool:
+        while kernel.queue:
+            self._route(kernel, kernel.queue.pop(0))
+        return False
+
+    def on_arrival(self, kernel: EventKernel, req: ServingRequest) -> None:
+        self._route(kernel, req)
+
+    def on_tick(self, kernel: EventKernel, engine: EngineSim) -> None:
+        engine.step(kernel)
+
+    def on_reconfig(self, kernel: EventKernel, engine: EngineSim) -> None:
+        engine.finish_migration(kernel)
+
+    # -- metrics -----------------------------------------------------------
+
+    def result(self, kernel: EventKernel,
+               jobs: list) -> "ServingMetrics":
+        reqs: list[ServingRequest] = list(jobs)
+        completed = [r for r in reqs if r.done]
+        makespan = max(kernel.t, 1e-9)
+        ttfts = [r.ttft for r in completed]
+        tpots = [r.tpot for r in completed]
+        lats = [r.latency for r in completed]
+        good = [r for r in completed
+                if r.ttft <= self.cfg.slo_ttft_s
+                and r.tpot <= self.cfg.slo_tpot_s]
+        tokens = sum(r.generated for r in completed)
+        return ServingMetrics(
+            policy=self.name,
+            fleet=", ".join(d.name for d in kernel.devices),
+            n_requests=len(reqs),
+            n_completed=len(completed),
+            n_dropped=sum(e.n_dropped for e in self.engines),
+            makespan=makespan,
+            energy_j=sum(d.energy.joules for d in kernel.devices),
+            mean_ttft=sum(ttfts) / max(len(ttfts), 1),
+            p99_ttft=percentile(ttfts, 99),
+            mean_tpot=sum(tpots) / max(len(tpots), 1),
+            p99_tpot=percentile(tpots, 99),
+            p99_latency=percentile(lats, 99),
+            goodput_rps=len(good) / makespan,
+            throughput_rps=len(completed) / makespan,
+            tokens_per_s=tokens / makespan,
+            n_oom=sum(e.n_oom for e in self.engines),
+            n_early_restarts=sum(e.n_early for e in self.engines),
+            n_preemptions=sum(e.n_preemptions for e in self.engines),
+            n_scaleups=sum(e.n_scaleups for e in self.engines),
+            n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices))
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    policy: str
+    fleet: str
+    n_requests: int
+    n_completed: int
+    n_dropped: int
+    makespan: float
+    energy_j: float
+    mean_ttft: float
+    p99_ttft: float
+    mean_tpot: float
+    p99_tpot: float
+    p99_latency: float
+    goodput_rps: float
+    throughput_rps: float
+    tokens_per_s: float
+    n_oom: int
+    n_early_restarts: int
+    n_preemptions: int
+    n_scaleups: int
+    n_reconfigs: int
+
+    @property
+    def energy_per_token(self) -> float:
+        return self.energy_j / max(self.tokens_per_s * self.makespan, 1.0)
+
+    @property
+    def goodput_fraction(self) -> float:
+        return (self.goodput_rps * self.makespan
+                / max(self.n_requests, 1))
+
+    def summary(self) -> str:
+        return (f"{self.policy} on [{self.fleet}]: "
+                f"{self.n_completed}/{self.n_requests} done "
+                f"({self.n_dropped} dropped) in {self.makespan:.1f}s  "
+                f"ttft={self.mean_ttft:.2f}s (p99 {self.p99_ttft:.2f})  "
+                f"tpot={self.mean_tpot * 1e3:.0f}ms "
+                f"(p99 {self.p99_tpot * 1e3:.0f})  "
+                f"p99_lat={self.p99_latency:.1f}s  "
+                f"goodput={self.goodput_rps:.3f}/s  "
+                f"tok/s={self.tokens_per_s:.0f}  "
+                f"energy={self.energy_j / 1e3:.1f}kJ  "
+                f"oom={self.n_oom} early={self.n_early_restarts} "
+                f"preempt={self.n_preemptions} scaleup={self.n_scaleups} "
+                f"reconf={self.n_reconfigs}")
+
+
+def run_serving(device_models: Sequence[str], cfg: ServingConfig,
+                requests: Iterable[ServingRequest],
+                model: LLMServingModel | None = None) -> ServingMetrics:
+    """Simulate ``requests`` on a fleet of MIG devices under one serving
+    policy; e.g. ``run_serving(["a100"], ServingConfig(policy="dynamic"),
+    poisson_requests(200, rate_per_s=2.0))``."""
+    counts: dict[str, int] = {}
+    devices = []
+    for m in device_models:
+        idx = counts.get(m, 0)
+        counts[m] = idx + 1
+        devices.append(ServingDevice(m, name=f"{m}-{idx}"))
+    policy = ServingPolicy(model or LLMServingModel(), cfg)
+    return EventKernel(devices, policy).run(requests)

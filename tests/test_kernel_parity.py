@@ -1,0 +1,115 @@
+"""Golden parity: the unified event kernel reproduces the legacy loops.
+
+The values below were produced by the original hand-rolled event loops
+(``run_baseline`` / ``run_scheme_a`` / ``run_scheme_b`` as standalone
+``while`` loops in ``core/scheduler/events.py``, pre-refactor) on the
+seeded fig4 mixes, captured at full float repr precision.  The refactored
+policies run over :class:`~repro.core.scheduler.kernel.EventKernel` and
+must reproduce every metric **bit-for-bit** (``==``, no tolerance): the
+kernel performs the exact same device operations in the exact same order,
+so any drift here means the event loop semantics changed.
+"""
+
+import pytest
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
+
+from benchmarks.mixes import llm_mix, ml_mix, rodinia_mix
+
+GOLDEN = {
+    ('rodinia', 'Hm1', 'baseline'): {'makespan': 170.9999999999999, 'energy_j': 15254.99999999999, 'mem_util': 0.1, 'mean_turnaround': 87.21, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 50, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm1', 'scheme_a'): {'makespan': 45.26, 'energy_j': 8339.300000000001, 'mem_util': 0.6215201060539108, 'mean_turnaround': 22.97760000000001, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm1', 'scheme_a+steal'): {'makespan': 44.959999999999994, 'energy_j': 8322.8, 'mem_util': 0.625667259786477, 'mean_turnaround': 22.971600000000013, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm1', 'scheme_b'): {'makespan': 85.80000000000003, 'energy_j': 10569.000000000005, 'mem_util': 0.2, 'mean_turnaround': 44.760000000000026, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm2', 'baseline'): {'makespan': 190.74999999999991, 'energy_j': 17803.75000000002, 'mem_util': 0.0874999999999999, 'mean_turnaround': 97.28249999999997, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 50, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm2', 'scheme_a'): {'makespan': 48.82, 'energy_j': 9997.599999999999, 'mem_util': 0.5440521302744776, 'mean_turnaround': 24.793200000000002, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm2', 'scheme_a+steal'): {'makespan': 48.519999999999996, 'energy_j': 9981.099999999999, 'mem_util': 0.5474160140148394, 'mean_turnaround': 24.787200000000002, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm2', 'scheme_b'): {'makespan': 54.885, 'energy_j': 10331.175000000001, 'mem_util': 0.3382982599981781, 'mean_turnaround': 28.724800000000002, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 4, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm3', 'baseline'): {'makespan': 447.00000000000114, 'energy_j': 25365.00000000005, 'mem_util': 0.025, 'mean_turnaround': 225.73500000000024, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 100, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm3', 'scheme_a'): {'makespan': 67.35, 'energy_j': 4484.25, 'mem_util': 0.1660356347438752, 'mean_turnaround': 34.240500000000004, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm3', 'scheme_a+steal'): {'makespan': 67.05, 'energy_j': 4467.75, 'mem_util': 0.16677852348993277, 'mean_turnaround': 34.23750000000001, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm3', 'scheme_b'): {'makespan': 67.35, 'energy_j': 4484.249999999999, 'mem_util': 0.16670378619153664, 'mean_turnaround': 34.4955, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm4', 'baseline'): {'makespan': 372.9999999999998, 'energy_j': 46839.99999999998, 'mem_util': 0.45, 'mean_turnaround': 190.22999999999996, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 50, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm4', 'scheme_a'): {'makespan': 193.99999999999997, 'energy_j': 36995.0, 'mem_util': 0.883298969072165, 'mean_turnaround': 99.08, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm4', 'scheme_a+steal'): {'makespan': 193.99999999999997, 'energy_j': 36995.0, 'mem_util': 0.883298969072165, 'mean_turnaround': 99.08, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('rodinia', 'Hm4', 'scheme_b'): {'makespan': 194.29999999999995, 'energy_j': 37011.5, 'mem_util': 0.8826299536798767, 'mean_turnaround': 99.23000000000003, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht1', 'baseline'): {'makespan': 74.70499999999998, 'energy_j': 7759.174999999997, 'mem_util': 0.2740571246904492, 'mean_turnaround': 40.30233333333332, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 15, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht1', 'scheme_a'): {'makespan': 35.807500000000005, 'energy_j': 5619.812500000001, 'mem_util': 0.6035484884451582, 'mean_turnaround': 10.964333333333336, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 11, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht1', 'scheme_a+steal'): {'makespan': 35.5075, 'energy_j': 5603.3125, 'mem_util': 0.608647820882912, 'mean_turnaround': 10.864333333333331, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 11, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht1', 'scheme_b'): {'makespan': 38.19, 'energy_j': 5750.85, 'mem_util': 0.5614280570830061, 'mean_turnaround': 21.420333333333335, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 24, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht2', 'baseline'): {'makespan': 128.01, 'energy_j': 19501.050000000003, 'mem_util': 0.5737901335833138, 'mean_turnaround': 67.56222222222223, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 18, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht2', 'scheme_a'): {'makespan': 90.305, 'energy_j': 17427.275, 'mem_util': 0.8355392835391174, 'mean_turnaround': 31.001666666666665, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 10, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht2', 'scheme_a+steal'): {'makespan': 90.305, 'energy_j': 17427.275, 'mem_util': 0.8355392835391174, 'mean_turnaround': 31.001666666666665, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 10, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht2', 'scheme_b'): {'makespan': 101.43, 'energy_j': 18039.15, 'mem_util': 0.746262200532387, 'mean_turnaround': 51.278055555555575, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 29, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht3', 'baseline'): {'makespan': 204.53999999999996, 'energy_j': 24681.300000000003, 'mem_util': 0.37545101202698733, 'mean_turnaround': 103.91041666666666, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 36, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht3', 'scheme_a'): {'makespan': 106.905, 'energy_j': 19311.375, 'mem_util': 0.7481268415883261, 'mean_turnaround': 27.905277777777776, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 10, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht3', 'scheme_a+steal'): {'makespan': 105.01, 'energy_j': 19207.15, 'mem_util': 0.7616274640510426, 'mean_turnaround': 27.088055555555556, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 10, 'wasted_seconds': 0.0},
+    ('rodinia', 'Ht3', 'scheme_b'): {'makespan': 127.83, 'energy_j': 20462.249999999996, 'mem_util': 0.6262790424782916, 'mean_turnaround': 64.16569444444445, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 66, 'wasted_seconds': 0.0},
+    ('ml', 'Ml1', 'baseline'): {'makespan': 195.69500000000002, 'energy_j': 20242.175000000003, 'mem_util': 0.30181819923861114, 'mean_turnaround': 95.49142857142856, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 14, 'wasted_seconds': 0.0},
+    ('ml', 'Ml1', 'scheme_a'): {'makespan': 101.36000000000001, 'energy_j': 15053.750000000002, 'mem_util': 0.714232685477506, 'mean_turnaround': 50.123690476190475, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 9, 'wasted_seconds': 0.0},
+    ('ml', 'Ml1', 'scheme_b'): {'makespan': 103.42166666666667, 'energy_j': 15167.141666666668, 'mem_util': 0.6669939406636262, 'mean_turnaround': 52.454047619047614, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 8, 'wasted_seconds': 0.0},
+    ('ml', 'Ml2', 'baseline'): {'makespan': 237.44999999999996, 'energy_j': 21737.25, 'mem_util': 0.10262950094756795, 'mean_turnaround': 121.03928571428571, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 21, 'wasted_seconds': 0.0},
+    ('ml', 'Ml2', 'scheme_a'): {'makespan': 97.05000000000001, 'energy_j': 14015.25, 'mem_util': 0.6668791859866048, 'mean_turnaround': 56.34642857142857, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 7, 'wasted_seconds': 0.0},
+    ('ml', 'Ml2', 'scheme_b'): {'makespan': 119.9, 'energy_j': 15272.0, 'mem_util': 0.3654920767306089, 'mean_turnaround': 61.88809523809524, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 4, 'wasted_seconds': 0.0},
+    ('ml', 'Ml3', 'baseline'): {'makespan': 296.91, 'energy_j': 32920.65, 'mem_util': 0.43445614832777596, 'mean_turnaround': 159.7825, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 18, 'wasted_seconds': 0.0},
+    ('ml', 'Ml3', 'scheme_a'): {'makespan': 166.715, 'energy_j': 25759.925000000003, 'mem_util': 0.8225077227603995, 'mean_turnaround': 89.6938888888889, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('ml', 'Ml3', 'scheme_b'): {'makespan': 167.015, 'energy_j': 25776.424999999996, 'mem_util': 0.8218386073107207, 'mean_turnaround': 89.8438888888889, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 2, 'wasted_seconds': 0.0},
+    ('llm', 'qwen2', 'scheme_a'): {'makespan': 360.43000000000006, 'energy_j': 47367.12142857144, 'mem_util': 0.2517213885815197, 'mean_turnaround': 360.43000000000006, 'n_oom': 1, 'n_early_restarts': 0, 'n_reconfigs': 5, 'wasted_seconds': 215.33},
+    ('llm', 'qwen2', 'scheme_a+pred'): {'makespan': 161.77, 'energy_j': 25372.62142857143, 'mem_util': 0.2538353222874276, 'mean_turnaround': 161.77, 'n_oom': 0, 'n_early_restarts': 1, 'n_reconfigs': 5, 'wasted_seconds': 16.67},
+    ('llm', 'qwen2', 'scheme_b+pred'): {'makespan': 144.8, 'energy_j': 23493.800000000003, 'mem_util': 0.254284807226776, 'mean_turnaround': 144.8, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 1, 'wasted_seconds': 0.0},
+    ('llm', 'llama3', 'scheme_a'): {'makespan': 236.35000000000002, 'energy_j': 31362.12142857143, 'mem_util': 0.2528350670310896, 'mean_turnaround': 236.35000000000002, 'n_oom': 1, 'n_early_restarts': 0, 'n_reconfigs': 5, 'wasted_seconds': 135.25000000000003},
+    ('llm', 'llama3', 'scheme_a+pred'): {'makespan': 113.15, 'energy_j': 17722.12142857143, 'mem_util': 0.25592194514182964, 'mean_turnaround': 113.15, 'n_oom': 0, 'n_early_restarts': 1, 'n_reconfigs': 5, 'wasted_seconds': 12.05},
+    ('llm', 'llama3', 'scheme_b+pred'): {'makespan': 100.8, 'energy_j': 16354.8, 'mem_util': 0.2566475009206153, 'mean_turnaround': 100.8, 'n_oom': 0, 'n_early_restarts': 0, 'n_reconfigs': 1, 'wasted_seconds': 0.0},
+    ('llm', 'flan_t5_train', 'scheme_a'): {'makespan': 626.0, 'energy_j': 121010.13928571428, 'mem_util': 0.495687462941391, 'mean_turnaround': 523.4000000000001, 'n_oom': 4, 'n_early_restarts': 0, 'n_reconfigs': 5, 'wasted_seconds': 625.7},
+    ('llm', 'flan_t5_train', 'scheme_a+pred'): {'makespan': 545.1500000000001, 'energy_j': 108412.38928571431, 'mem_util': 0.5027411374346662, 'mean_turnaround': 442.55000000000007, 'n_oom': 0, 'n_early_restarts': 4, 'n_reconfigs': 5, 'wasted_seconds': 479.4000000000001},
+    ('llm', 'flan_t5_train', 'scheme_b+pred'): {'makespan': 361.8, 'energy_j': 78332.97857142858, 'mem_util': 0.4831667083108486, 'mean_turnaround': 249.71250000000003, 'n_oom': 0, 'n_early_restarts': 1, 'n_reconfigs': 4, 'wasted_seconds': 119.85000000000002},
+    ('llm', 'flan_t5', 'scheme_a'): {'makespan': 213.48000000000002, 'energy_j': 47078.46428571429, 'mem_util': 0.5918993458597072, 'mean_turnaround': 162.9966666666667, 'n_oom': 6, 'n_early_restarts': 0, 'n_reconfigs': 5, 'wasted_seconds': 258.64000000000004},
+    ('llm', 'flan_t5', 'scheme_a+pred'): {'makespan': 192.22000000000003, 'energy_j': 42477.16428571429, 'mem_util': 0.5772141842849098, 'mean_turnaround': 141.73666666666668, 'n_oom': 0, 'n_early_restarts': 6, 'n_reconfigs': 5, 'wasted_seconds': 197.04},
+    ('llm', 'flan_t5', 'scheme_b+pred'): {'makespan': 151.55333333333334, 'energy_j': 33086.36547619048, 'mem_util': 0.5031131813687975, 'mean_turnaround': 92.12666666666667, 'n_oom': 0, 'n_early_restarts': 2, 'n_reconfigs': 8, 'wasted_seconds': 67.22},
+}
+
+FIELDS = ["makespan", "energy_j", "mem_util", "mean_turnaround",
+          "n_oom", "n_early_restarts", "n_reconfigs", "wasted_seconds"]
+
+_MIX_OF = {"rodinia": rodinia_mix, "ml": ml_mix, "llm": llm_mix}
+
+
+def _run(policy: str, jobs):
+    a100 = MigA100Backend()
+    if policy == "baseline":
+        return run_baseline(jobs, a100, A100_POWER)
+    if policy == "scheme_a":
+        return run_scheme_a(jobs, a100, A100_POWER, use_prediction=False)
+    if policy == "scheme_a+steal":
+        return run_scheme_a(jobs, a100, A100_POWER, use_prediction=False,
+                            work_steal=True)
+    if policy == "scheme_a+pred":
+        return run_scheme_a(jobs, a100, A100_POWER, use_prediction=True)
+    if policy == "scheme_b":
+        return run_scheme_b(jobs, a100, A100_POWER, use_prediction=False)
+    if policy == "scheme_b+pred":
+        return run_scheme_b(jobs, a100, A100_POWER, use_prediction=True)
+    raise AssertionError(policy)
+
+
+@pytest.mark.parametrize("family,mix,policy",
+                         list(GOLDEN), ids=lambda v: str(v))
+def test_kernel_reproduces_legacy_loops(family, mix, policy):
+    metrics = _run(policy, _MIX_OF[family](mix))
+    golden = GOLDEN[(family, mix, policy)]
+    for field in FIELDS:
+        assert getattr(metrics, field) == golden[field], (
+            f"{family}/{mix}/{policy}: {field} drifted from the legacy "
+            f"loop: {getattr(metrics, field)!r} != {golden[field]!r}")
+
+
+def test_legacy_loops_are_gone():
+    """The refactor deletes the hand-rolled loops; the only implementations
+    of the policies are kernel plug-ins (no aliasing back into events)."""
+    import repro.core.scheduler.events as events
+    for name in ("run_baseline", "run_scheme_a", "run_scheme_b",
+                 "ClusterSim"):
+        assert not hasattr(events, name)

@@ -1,0 +1,84 @@
+"""Tests for the checkpointless restart policies (core/restart.py)."""
+
+import pytest
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.restart import (NeedsLargerPartition, early_restart_target,
+                                oom_restart_target, with_oom_retry)
+
+
+@pytest.fixture(scope="module")
+def a100():
+    return MigA100Backend()
+
+
+class TestOomRestartTarget:
+    def test_next_larger_rung(self, a100):
+        """The paper's 10GB -> 20GB example."""
+        ten = next(p for p in a100.profiles if p.mem_gb == 10.0)
+        assert oom_restart_target(a100, ten).mem_gb == 20.0
+
+    def test_largest_profile_stays_largest(self, a100):
+        """An OOM on the biggest slice has nowhere to grow; the policy must
+        return the largest profile, not None/crash."""
+        largest = a100.profiles[-1]
+        assert oom_restart_target(a100, largest) is largest
+
+    def test_hopper_ladder_crosses_equal_memory(self):
+        h100 = MigH100Backend()
+        g20 = next(p for p in h100.profiles if p.name == "1g.20gb")
+        # next *larger memory*, not next in list (2g.20gb has equal memory)
+        assert oom_restart_target(h100, g20).mem_gb == 40.0
+
+
+class TestEarlyRestartTarget:
+    def test_tightest_profile_for_prediction(self, a100):
+        assert early_restart_target(a100, 7.5).name == "2g.10gb"
+        assert early_restart_target(a100, 10.0).name == "2g.10gb"
+
+    def test_headroom_bumps_profile(self, a100):
+        """A prediction near a slice boundary with safety headroom must move
+        to the next slice: 9.5GB * 1.2 no longer fits 10GB."""
+        assert early_restart_target(a100, 9.5).mem_gb == 10.0
+        assert early_restart_target(a100, 9.5, headroom=1.2).mem_gb == 20.0
+
+    def test_none_when_nothing_fits(self, a100):
+        assert early_restart_target(a100, 500.0) is None
+        assert early_restart_target(a100, 35.0, headroom=2.0) is None
+
+
+class TestWithOomRetry:
+    def test_success_passes_through(self, a100):
+        wrapped = with_oom_retry(lambda x: x + 1, backend=a100,
+                                 profile=a100.profiles[0])
+        assert wrapped(41) == 42
+
+    def test_resource_exhausted_grows_to_next_profile(self, a100):
+        def boom():
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory "
+                               "allocating 5.1GB")
+        wrapped = with_oom_retry(boom, backend=a100,
+                                 profile=a100.profiles[0])   # 1g.5gb
+        with pytest.raises(NeedsLargerPartition) as exc:
+            wrapped()
+        assert exc.value.profile.mem_gb == 10.0   # 5GB -> 10GB rung
+        assert isinstance(exc.value.__cause__, RuntimeError)
+
+    def test_oom_message_variant_also_caught(self, a100):
+        def boom():
+            raise RuntimeError("Out of memory while trying to allocate")
+        wrapped = with_oom_retry(boom, backend=a100,
+                                 profile=a100.profiles[-1])
+        with pytest.raises(NeedsLargerPartition) as exc:
+            wrapped()
+        # largest profile: the retry target saturates at the top rung
+        assert exc.value.profile is a100.profiles[-1]
+
+    def test_unrelated_errors_propagate(self, a100):
+        def bad():
+            raise ValueError("shape mismatch")
+        wrapped = with_oom_retry(bad, backend=a100,
+                                 profile=a100.profiles[0])
+        with pytest.raises(ValueError, match="shape mismatch"):
+            wrapped()

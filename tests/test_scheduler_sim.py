@@ -6,8 +6,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.mig_a100 import MigA100Backend
 from repro.core.tpu_slices import TpuPodBackend
 from repro.core.scheduler.energy import A100_POWER, pod_power_model
-from repro.core.scheduler.events import (run_baseline, run_scheme_a,
-                                         run_scheme_b)
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
 from repro.core.scheduler.job import (GB, Job, llm_growth_trajectory,
                                       make_mix, rodinia_job,
                                       solve_growth_params)
@@ -143,6 +143,46 @@ class TestPolicies:
         # concurrency must win despite per-job stretch
         if n_jobs >= 14:
             assert a.makespan <= base.makespan * 1.01 + 4 * 0.3
+
+
+class TestPlanCache:
+    def test_dynamic_plans_memoized_per_profile(self, a100, monkeypatch):
+        """The trajectory replay is O(n_iters); repeated placements of the
+        same job on the same profile must hit the per-job cache and return
+        identical (but independently mutable) plans."""
+        from repro.core.scheduler import events
+        job = _llm_job("memo", oom_gb=10.0, oom_iter=40, n_iters=60)
+        calls = {"n": 0}
+        real = events._plan_dynamic
+
+        def counting(*args, **kwargs):
+            calls["n"] += 1
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(events, "_plan_dynamic", counting)
+        prof = a100.profiles[1]           # the 10GB slice
+        p1 = events.plan_execution(job, prof, 1.0, True, a100)
+        p2 = events.plan_execution(job, prof, 1.0, True, a100)
+        assert calls["n"] == 1            # second call served from cache
+        assert p1 == p2 and p1 is not p2  # fresh copy: start() mutates it
+        p1.duration += 0.3
+        assert events.plan_execution(job, prof, 1.0, True, a100) == p2
+        # a different profile or predictor setting is a different plan
+        events.plan_execution(job, a100.profiles[2], 1.0, True, a100)
+        events.plan_execution(job, prof, 1.0, False, a100)
+        assert calls["n"] == 3
+
+    def test_cached_scheme_a_matches_uncached_semantics(self, a100):
+        """End-to-end: restarts re-place the same trajectory repeatedly; the
+        cache must not change a single metric."""
+        m1 = run_scheme_a([_llm_job("q", oom_gb=10.0, oom_iter=80,
+                                    n_iters=100)], a100, A100_POWER,
+                          use_prediction=True)
+        m2 = run_scheme_a([_llm_job("q", oom_gb=10.0, oom_iter=80,
+                                    n_iters=100)], a100, A100_POWER,
+                          use_prediction=True)
+        assert m1.makespan == m2.makespan
+        assert m1.energy_j == m2.energy_j
 
 
 class TestOnlineArrivals:

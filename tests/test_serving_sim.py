@@ -1,0 +1,148 @@
+"""Tests for the request-level LLM serving simulation (serving/sim.py)."""
+
+import math
+
+import pytest
+
+from repro.core.scheduler.metrics import percentile
+from repro.serving.sim import (LLMServingModel, ServingConfig, ServingRequest,
+                               poisson_requests, run_serving)
+
+
+def _chat(n=120, rate=2.0, seed=11):
+    return poisson_requests(n, rate_per_s=rate, seed=seed)
+
+
+class TestRequests:
+    def test_poisson_requests_deterministic_and_monotone(self):
+        a = poisson_requests(50, rate_per_s=1.0, seed=3)
+        b = poisson_requests(50, rate_per_s=1.0, seed=3)
+        assert [(r.arrival, r.prompt_tokens, r.decode_tokens) for r in a] == \
+            [(r.arrival, r.prompt_tokens, r.decode_tokens) for r in b]
+        arr = [r.arrival for r in a]
+        assert arr == sorted(arr) and arr[0] > 0.0
+        assert all(r.prompt_tokens >= 8 and r.decode_tokens >= 4 for r in a)
+
+    def test_percentile_interpolates(self):
+        assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+        assert percentile([5.0], 99) == 5.0
+        assert math.isnan(percentile([], 99))
+
+
+class TestServingPolicies:
+    def test_all_requests_complete_with_slo_metrics(self):
+        m = run_serving(["a100"], ServingConfig(policy="full"), _chat())
+        assert m.n_completed == 120 and m.n_dropped == 0
+        assert m.mean_ttft > 0 and m.mean_tpot > 0
+        assert m.p99_ttft >= m.mean_ttft * 0.99
+        assert m.p99_latency > 0 and m.tokens_per_s > 0
+        assert m.energy_j > 0
+        # goodput can never exceed throughput
+        assert m.goodput_rps <= m.throughput_rps + 1e-12
+
+    def test_deterministic(self):
+        cfg = ServingConfig(policy="dynamic", n_engines=2)
+        m1 = run_serving(["a100"], cfg, _chat())
+        m2 = run_serving(["a100"], cfg, _chat())
+        assert m1.makespan == m2.makespan
+        assert m1.energy_j == m2.energy_j
+        assert m1.p99_latency == m2.p99_latency
+        assert m1.n_reconfigs == m2.n_reconfigs
+
+    @pytest.mark.parametrize("device", ["a100", "h100"])
+    def test_dynamic_engines_grow_under_load(self, device):
+        cfg = ServingConfig(policy="dynamic", n_engines=2,
+                            use_prediction=False)
+        m = run_serving([device], cfg, _chat(n=200))
+        assert m.n_completed == 200
+        # fission/fusion actually happened: more reconfigs than the two
+        # engine-creation allocations
+        assert m.n_oom + m.n_scaleups >= 1
+        assert m.n_reconfigs > 2
+
+    def test_prediction_replaces_crashes_with_early_restarts(self):
+        """Paper §2.3 at request level: with the queue trigger disabled the
+        only growth path is memory pressure — the predictor must convert
+        OOM crashes into early restarts and not lose goodput."""
+        kw = dict(policy="dynamic", n_engines=2, scale_up_queue_ticks=0)
+        crash = run_serving(
+            ["a100"], ServingConfig(use_prediction=False, **kw), _chat(n=250))
+        early = run_serving(
+            ["a100"], ServingConfig(use_prediction=True, **kw), _chat(n=250))
+        assert crash.n_oom >= 1
+        assert early.n_early_restarts >= 1
+        assert early.n_oom < crash.n_oom
+        assert early.goodput_rps >= crash.goodput_rps
+
+    def test_static_preempts_instead_of_growing(self):
+        reqs = poisson_requests(150, rate_per_s=0.9, seed=23,
+                                median_prompt=512, median_decode=768,
+                                sigma_decode=0.7)
+        m = run_serving(["a100"],
+                        ServingConfig(policy="static", n_engines=2), reqs)
+        assert m.n_completed == 150 and m.n_dropped == 0
+        assert m.n_preemptions >= 1       # vLLM-style evict + re-prefill
+        assert m.n_scaleups == 0          # static never reshapes
+        assert m.n_reconfigs == 2         # just the two engine slices
+
+    def test_full_batch_preemption_cannot_strand_requests(self):
+        """Regression: when preemption evicts the entire running batch the
+        engine must re-admit (or drop) the evicted work — every request
+        must end either completed or dropped, never silently stranded."""
+        model = LLMServingModel(kv_mb_per_token=50.0)
+        reqs = [ServingRequest(rid=i, arrival=0.1 * (i + 1),
+                               prompt_tokens=64, decode_tokens=400)
+                for i in range(2)]
+        m = run_serving(["a100"],
+                        ServingConfig(policy="static", n_engines=2),
+                        reqs, model=model)
+        assert m.n_completed + m.n_dropped == 2
+        for r in reqs:
+            assert r.done or r.dropped
+
+    def test_oversized_request_is_dropped_not_wedged(self):
+        reqs = [ServingRequest(rid=0, arrival=0.5, prompt_tokens=500_000,
+                               decode_tokens=8),
+                ServingRequest(rid=1, arrival=0.6, prompt_tokens=64,
+                               decode_tokens=8)]
+        m = run_serving(["a100"], ServingConfig(policy="dynamic",
+                                                n_engines=1), reqs)
+        assert m.n_dropped == 1
+        assert m.n_completed == 1         # the sane request still finishes
+
+    def test_routing_respects_device_feasibility(self):
+        """Regression: a request only a bigger device can ever hold must be
+        routed there, not dropped by the least-loaded smaller device."""
+        big = ServingRequest(rid=0, arrival=0.5, prompt_tokens=90_000,
+                             decode_tokens=8)   # ~45GB KV: H100-only
+        m = run_serving(["a100", "h100"],
+                        ServingConfig(policy="dynamic", n_engines=1), [big])
+        assert m.n_completed == 1 and m.n_dropped == 0
+
+    def test_fleet_serving_routes_across_devices(self):
+        cfg = ServingConfig(policy="static", n_engines=1)
+        m = run_serving(["a100", "h100"], cfg, _chat(n=150, rate=3.0))
+        assert m.n_completed == 150
+        assert m.fleet == "a100-0, h100-0"
+        # both devices must have burned more than their idle floor: work
+        # landed on each
+        per_dev = m.energy_j
+        assert per_dev > 0
+        two_dev = run_serving(["a100", "a100"], cfg, _chat(n=150, rate=3.0))
+        one_dev = run_serving(["a100"], cfg, _chat(n=150, rate=3.0))
+        assert two_dev.mean_ttft <= one_dev.mean_ttft + 1e-9
+
+    def test_mean_tpot_respects_slice_speed(self):
+        """An engine on a small slice decodes ~1/c slower than the full
+        device — the latency model must scale with compute fraction."""
+        model = LLMServingModel()
+        full = run_serving(["a100"], ServingConfig(policy="full"),
+                           _chat(n=60, rate=0.2))
+        static = run_serving(["a100"],
+                             ServingConfig(policy="static", n_engines=2),
+                             _chat(n=60, rate=0.2))
+        assert full.mean_tpot < static.mean_tpot
+        # at idle load the full engine's step time is the fixed cost + one
+        # sequence
+        lone = (model.decode_step_fixed_s + model.decode_step_per_seq_s)
+        assert full.mean_tpot == pytest.approx(lone, rel=0.5)

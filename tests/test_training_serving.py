@@ -131,6 +131,38 @@ class TestServeEngine:
         assert len(req) >= 8
         assert all(0 < r <= 1 for r in reuse)
 
+    def test_engine_reuse_resets_per_run_state(self):
+        """A second batch on the same engine must start with fresh
+        accounting: no inherited live watermark (which suppressed the first
+        iteration's allocation) and no converged predictor state."""
+        cfg = get_smoke_config("qwen3-0.6b")
+        params, _ = registry.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, EngineConfig(max_batch=2,
+                                                    max_context=64,
+                                                    predict=False))
+        reqs = lambda: [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                                max_new_tokens=8) for i in range(2)]
+        eng.run(reqs())
+        first = [s.requested_bytes for s in eng.accountant.history]
+        n_first = len(first)
+        eng.run(reqs())
+        second = [s.requested_bytes for s in eng.accountant.history]
+        # history was reset, not appended to
+        assert len(second) == n_first
+        # identical batch => identical allocation series; before the fix the
+        # second run's first iteration missed the live-delta allocation
+        assert second == pytest.approx(first, rel=1e-6)
+
+        # with prediction on, the predictor must also restart per run
+        # (a partition large enough that no early restart fires)
+        pred_eng = ServeEngine(cfg, params,
+                               EngineConfig(max_batch=2, max_context=64,
+                                            partition_gb=1e3, predict=True))
+        pred_eng.run(reqs())
+        n_obs = len(pred_eng.predictor.req_mem_list)
+        pred_eng.run(reqs())
+        assert len(pred_eng.predictor.req_mem_list) == n_obs  # not doubled
+
     def test_early_restart_raised_on_tiny_partition(self):
         from repro.core.restart import NeedsLargerPartition
         cfg = get_smoke_config("qwen3-0.6b")
