@@ -1,0 +1,129 @@
+"""Planner microbenchmark: compiled transition graph vs. the seed
+Algorithm 3 hot path.
+
+Measures (a) the one-off cost of compiling a backend's FSM into the
+indexed transition graph (cold), and (b) steady-state allocations/sec of
+``PartitionManager.allocate`` with the warm graph against the seed path
+(re-enumerating placements + reachability argmax per call), plus the
+planner's full plan+execute placement rate.  The acceptance bar — warm
+graph >= 5x the seed allocate path — is asserted here so CI catches a
+regression in the O(1) lookup structure.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.partition_manager import PartitionManager
+from repro.core.planner import (SCHEME_B_COST, PartitionPlanner,
+                                compile_transition_graph, place_request)
+from repro.core.reachability import clear_reachability_cache
+
+#: the warm-graph allocate path must beat the seed path by at least this
+#: factor (ISSUE 3 acceptance criterion).
+MIN_SPEEDUP = 5.0
+
+_CHURN_ROUNDS = 400
+
+
+def _churn_allocs(pm: PartitionManager) -> int:
+    """One churn round: carve a realistic profile mix until the device
+    fills, then release everything (exercises allocate + free + argmax)."""
+    backend = pm.backend
+    seq = ([backend.profiles[0]] * 4
+           + [backend.tightest_profile(20.0) or backend.profiles[-1]]
+           + [backend.profiles[1]])
+    live = []
+    n = 0
+    for prof in seq:
+        part = pm.allocate(prof)
+        if part is not None:
+            live.append(part)
+            n += 1
+    for part in live:
+        pm.release(part)
+    return n
+
+
+def _alloc_rate(pm: PartitionManager, rounds: int = _CHURN_ROUNDS
+                ) -> tuple[float, int]:
+    n = 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        n += _churn_allocs(pm)
+    dt = time.perf_counter() - t0
+    return n / dt, n
+
+
+def run(csv_rows: list) -> dict:
+    print("\n=== planner: compiled transition graph vs. seed Alg. 3 ===")
+    extra: dict = {"devices": {}}
+
+    for backend_cls in (MigA100Backend, MigH100Backend):
+        name = backend_cls.__name__.replace("Mig", "").replace("Backend",
+                                                               "").lower()
+        clear_reachability_cache()
+        backend = backend_cls()
+
+        t0 = time.perf_counter()
+        graph = compile_transition_graph(backend)
+        cold_ms = (time.perf_counter() - t0) * 1e3
+        assert graph is not None
+
+        # warm graph: O(1) dict lookups per allocate
+        warm_rate, n = _alloc_rate(PartitionManager(backend))
+        # seed path: enumerate placements + reachability argmax per call
+        seed_rate, _ = _alloc_rate(
+            PartitionManager(backend, use_compiled_graph=False))
+        speedup = warm_rate / seed_rate
+
+        # the full planner path (plan + execute, scheme-B weights)
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        t0 = time.perf_counter()
+        n_place = 0
+        for _ in range(_CHURN_ROUNDS // 4):
+            live = []
+            for est, c in ((4.0, 0.3), (8.0, 0.4), (18.0, 0.5), (4.0, 0.2)):
+                result = planner.execute(planner.plan(place_request(
+                    backend, est, c, reconfig_cost_s=0.3)))
+                if result is not None:
+                    result.partition.busy = True   # as kernel.start would
+                    live.append(result.partition)
+                    n_place += 1
+            for part in live:
+                part.busy = False
+                pm.release(part)
+        plan_rate = n_place / (time.perf_counter() - t0)
+
+        print(f"{name}: graph {graph.n_states} states / "
+              f"{graph.n_transitions} transitions, cold build {cold_ms:.1f}ms")
+        print(f"  allocate: warm graph {warm_rate:,.0f}/s vs seed "
+              f"{seed_rate:,.0f}/s -> {speedup:.1f}x   "
+              f"plan+execute {plan_rate:,.0f}/s")
+        csv_rows.append((f"planner.{name}.warm_alloc_us", 1e6 / warm_rate,
+                         f"{warm_rate:.0f}/s"))
+        csv_rows.append((f"planner.{name}.seed_alloc_us", 1e6 / seed_rate,
+                         f"{seed_rate:.0f}/s"))
+        csv_rows.append((f"planner.{name}.speedup", speedup,
+                         f"{speedup:.1f}x"))
+        csv_rows.append((f"planner.{name}.cold_build_ms", cold_ms * 1e3,
+                         f"{graph.n_states} states"))
+        extra["devices"][name] = {
+            "n_states": graph.n_states,
+            "n_transitions": graph.n_transitions,
+            "cold_build_ms": cold_ms,
+            "warm_allocs_per_s": warm_rate,
+            "seed_allocs_per_s": seed_rate,
+            "plan_execute_per_s": plan_rate,
+            "speedup": speedup,
+            "n_allocs_timed": n,
+        }
+        assert speedup >= MIN_SPEEDUP, (
+            f"{name}: warm transition graph is only {speedup:.1f}x the seed "
+            f"allocate path (acceptance: >= {MIN_SPEEDUP}x)")
+
+    extra["min_speedup_required"] = MIN_SPEEDUP
+    return extra

@@ -16,15 +16,16 @@ import pathlib
 import sys
 
 from benchmarks import (bench_breakdown, bench_fig4_general, bench_fig4_ml,
-                        bench_fleet, bench_kernels, bench_predictor,
-                        bench_reachability, bench_roofline, bench_serving,
-                        bench_tpu_pod)
+                        bench_fleet, bench_kernels, bench_planner,
+                        bench_predictor, bench_reachability, bench_roofline,
+                        bench_serving, bench_tpu_pod)
 
 BENCHES = {
     "fig4_general": bench_fig4_general.run,   # paper Fig. 4a-4d
     "fig4_ml": bench_fig4_ml.run,             # paper Fig. 4e-4h
     "predictor": bench_predictor.run,         # paper §5.2.2 table
     "reachability": bench_reachability.run,   # paper Fig. 3 + §4.2 example
+    "planner": bench_planner.run,             # compiled graph vs seed Alg. 3
     "breakdown": bench_breakdown.run,         # paper Tables 3-4
     "kernels": bench_kernels.run,             # Pallas kernel paths
     "roofline": bench_roofline.run,           # §Roofline (dry-run derived)

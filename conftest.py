@@ -10,7 +10,23 @@ collect and the property tests run a fixed pseudo-random sample.
 import sys
 from pathlib import Path
 
+import pytest
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover - exercised only without hypothesis
     sys.path.insert(0, str(Path(__file__).resolve().parent / "tests" / "_shims"))
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _fresh_reachability_cache():
+    """Start and end the run with empty per-backend table caches so
+    per-test backend tables (tiny TPU pods, custom MIG tables) cannot leak
+    into later suite invocations in the same process; within a run the
+    caches are LRU-bounded (``repro.core.reachability.MAX_CACHED_BACKENDS``)
+    and intentionally shared — re-deriving the A100/H100 tables per test
+    would dominate the suite's wall-clock."""
+    from repro.core.reachability import clear_reachability_cache
+    clear_reachability_cache()
+    yield
+    clear_reachability_cache()

@@ -20,6 +20,8 @@ from typing import Hashable
 from repro.core.partition_state import (PartitionBackend, PartitionProfile,
                                         Placement)
 
+_UNSET = object()   # lazy transition-graph sentinel
+
 
 @dataclasses.dataclass
 class Partition:
@@ -34,12 +36,24 @@ class Partition:
 class PartitionManager:
     """Owns the device FSM state; allocation maximizes |F_s| (Alg. 3)."""
 
-    def __init__(self, backend: PartitionBackend) -> None:
+    def __init__(self, backend: PartitionBackend,
+                 use_compiled_graph: bool = True) -> None:
         self.backend = backend
         self.state: Hashable = backend.initial_state()
         self.live: dict[int, Partition] = {}
         self._pid = itertools.count()
         self.n_reconfigs = 0  # fission/fusion + fresh allocations (metric)
+        self._graph = _UNSET if use_compiled_graph else None
+
+    @property
+    def graph(self):
+        """The backend's compiled transition graph (None for backends whose
+        state space cannot be enumerated); compiled lazily, cached per
+        device table process-wide."""
+        if self._graph is _UNSET:
+            from repro.core.planner.graph import compile_transition_graph
+            self._graph = compile_transition_graph(self.backend)
+        return self._graph
 
     # -- queries -------------------------------------------------------------
 
@@ -56,13 +70,33 @@ class PartitionManager:
 
     # -- Algorithm 3 -----------------------------------------------------------
 
-    def allocate(self, profile: PartitionProfile) -> Partition | None:
-        """alloc(x): argmax-reachability placement, or None (FAIL)."""
-        placements = self.backend.enumerate_placements(self.state, profile)
+    def best_placement(self, state: Hashable, profile: PartitionProfile
+                       ) -> Placement | None:
+        """Alg. 3's argmax-|F_s| placement for a *hypothetical* state —
+        one dict lookup on compiled backends, direct enumeration otherwise.
+        Evaluation only: nothing is committed."""
+        graph = self.graph
+        if graph is not None:
+            return graph.best_placement(state, profile)
+        placements = self.backend.enumerate_placements(state, profile)
         if not placements:
             return None
-        best = max(placements, key=lambda pl: self.backend.reachability(
+        return max(placements, key=lambda pl: self.backend.reachability(
             pl.next_state))
+
+    def reach(self, state: Hashable) -> int:
+        """|F_s| of a (possibly hypothetical) state, via the graph when
+        compiled."""
+        graph = self.graph
+        if graph is not None:
+            return graph.reach(state)
+        return self.backend.reachability(state)
+
+    def allocate(self, profile: PartitionProfile) -> Partition | None:
+        """alloc(x): argmax-reachability placement, or None (FAIL)."""
+        best = self.best_placement(self.state, profile)
+        if best is None:
+            return None
         return self._commit(best)
 
     def _commit(self, placement: Placement) -> Partition:
@@ -91,36 +125,28 @@ class PartitionManager:
             return part
 
         # Fission/fusion: free all idle partitions (merging their space back
-        # into the FSM) and retry.  On success the idle partitions are
-        # consumed — their space now backs the new placement; on failure
-        # they are restored at their original handles below.  This realizes
-        # "merge neighboring small partitions or split bigger partitions"
-        # in FSM terms: releasing idle space coalesces buddies / frees GPC
-        # spans, and the argmax re-placement splits as needed.
+        # into the FSM) and retry.  Feasibility is evaluated on the
+        # *hypothetical* idle-freed state first — a failed reshape is a true
+        # no-op (exact FSM state, live Partition objects and n_reconfigs all
+        # untouched), so probing it from routers/planners is free.  On
+        # success the idle partitions are consumed — their space now backs
+        # the new placement.  This realizes "merge neighboring small
+        # partitions or split bigger partitions" in FSM terms: releasing
+        # idle space coalesces buddies / frees GPC spans, and the argmax
+        # re-placement splits as needed.
         idle = self.idle_partitions()
         if not idle:
             return None
-        saved = [(p.profile, p.handle) for p in idle]
-        n_reconfigs_before = self.n_reconfigs
+        state_free: Hashable = self.state
+        for p in idle:
+            state_free = self.backend.free(state_free, p.handle)
+        best = self.best_placement(state_free, profile)
+        if best is None:
+            return None
         for p in idle:
             self.release(p)
-        part = self.allocate(profile)
-        if part is None:
-            # roll back: restore each idle partition at its *original*
-            # placement (argmax re-placement could fragment the state and
-            # leave a survivor with nowhere to go).
-            for prof, handle in saved:
-                placements = self.backend.enumerate_placements(self.state,
-                                                               prof)
-                original = next((pl for pl in placements
-                                 if pl.handle == handle), None)
-                assert original is not None, "rollback must succeed"
-                self._commit(original)
-            # a failed probe is a no-op on the device: don't let the
-            # restore commits count as reconfigurations
-            self.n_reconfigs = n_reconfigs_before
-            return None
-        self.n_reconfigs += len(saved)
+        part = self._commit(best)
+        self.n_reconfigs += len(idle)
         return part
 
     # -- reporting -------------------------------------------------------------

@@ -52,6 +52,12 @@ class PartitionBackend:
     #: for tightest-fit and next-larger-on-OOM lookups (paper §2.3, §4.3).
     profiles: Sequence[PartitionProfile]
 
+    #: True when the state space is small enough to intern as a compiled
+    #: transition graph (:mod:`repro.core.planner.graph`); closed-form
+    #: backends with astronomically many states (the TPU buddy pod) leave
+    #: this False and keep the direct-enumeration path.
+    supports_compiled_graph: bool = False
+
     def initial_state(self) -> Hashable:
         """s0 — the unpartitioned device."""
         raise NotImplementedError

@@ -1,0 +1,44 @@
+"""Unified partition planner (paper §4.2-4.3 as one decision procedure).
+
+The repo's batch schedulers, serving engines and fleet routers all make
+the same kind of decision — pick a partition action that maximizes future
+configurability at acceptable reconfiguration cost.  This package is that
+single decision procedure:
+
+* :mod:`~repro.core.planner.graph` — the compiled FSM transition graph
+  (state ids, cached placements, precomputed argmax-|F_s|) that turns the
+  hot allocate path into O(1) lookups,
+* :mod:`~repro.core.planner.actions` — the typed candidate actions
+  (ReuseIdle / FreshAllocate / ReshapeFuseFission / Grow / Migrate / Wait),
+* :mod:`~repro.core.planner.cost` — the one cost model; policies register
+  lexicographic weights instead of hand-rolled ladders,
+* :mod:`~repro.core.planner.ladders` — the shared candidate-profile
+  ladders (placement, growth, restart rungs),
+* :mod:`~repro.core.planner.planner` — ``PartitionPlanner.plan/execute``
+  returning an explainable :class:`Plan`.
+"""
+
+from repro.core.planner.actions import (Action, FreshAllocate, Grow, Migrate,
+                                        ReshapeFuseFission, ReuseIdle, Wait)
+from repro.core.planner.cost import (BEST_FIT_DEVICE_COST, CostModel,
+                                     CostTerms, ENERGY_AWARE_DEVICE_COST,
+                                     SCHEME_B_COST, SERVING_GROW_COST,
+                                     normalized_reachability)
+from repro.core.planner.graph import (TransitionGraph,
+                                      compile_transition_graph)
+from repro.core.planner.ladders import (grow_ladder, grow_request,
+                                        place_request, placement_ladder,
+                                        predicted_rung, restart_rung,
+                                        tight_profile)
+from repro.core.planner.planner import (Candidate, PartitionPlanner, Plan,
+                                        PlanRequest, PlanResult)
+
+__all__ = [
+    "Action", "BEST_FIT_DEVICE_COST", "Candidate", "CostModel", "CostTerms",
+    "ENERGY_AWARE_DEVICE_COST", "FreshAllocate", "Grow", "Migrate",
+    "PartitionPlanner", "Plan", "PlanRequest", "PlanResult",
+    "ReshapeFuseFission", "ReuseIdle", "SCHEME_B_COST", "SERVING_GROW_COST",
+    "TransitionGraph", "Wait", "compile_transition_graph", "grow_ladder",
+    "grow_request", "normalized_reachability", "place_request",
+    "placement_ladder", "predicted_rung", "restart_rung", "tight_profile",
+]

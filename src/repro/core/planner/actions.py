@@ -1,0 +1,109 @@
+"""Typed candidate actions the partition planner enumerates and scores.
+
+One action = one concrete way of satisfying a partition request.  The
+planner scores every feasible action with the shared cost model
+(:mod:`repro.core.planner.cost`) and commits exactly one — so every
+placement decision in the repo is explainable as "these actions were
+considered, with these costs, and this one won".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.partition_manager import Partition
+from repro.core.partition_state import PartitionProfile, Placement
+
+
+class Action:
+    """Base of all planner actions."""
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ReuseIdle(Action):
+    """Bind to an existing idle partition of exactly the wanted profile —
+    scheme B's first preference: no reconfiguration at all."""
+
+    partition: Partition
+
+    @property
+    def profile(self) -> PartitionProfile:
+        return self.partition.profile
+
+    def describe(self) -> str:
+        return f"reuse idle {self.profile.name}@{self.partition.handle!r}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FreshAllocate(Action):
+    """Carve a new partition at the argmax-|F_s| placement (Alg. 3)."""
+
+    placement: Placement
+
+    @property
+    def profile(self) -> PartitionProfile:
+        return self.placement.profile
+
+    def describe(self) -> str:
+        return f"allocate {self.profile.name}@{self.placement.handle!r}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshapeFuseFission(Action):
+    """Fuse the idle partitions' space back into the FSM and re-carve the
+    wanted profile (scheme B's merge/split, paper §4.3) — busy partitions
+    are never touched."""
+
+    placement: Placement
+    consumed: tuple[Partition, ...]
+
+    @property
+    def profile(self) -> PartitionProfile:
+        return self.placement.profile
+
+    def describe(self) -> str:
+        return (f"fuse/fission {len(self.consumed)} idle -> "
+                f"{self.profile.name}@{self.placement.handle!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Grow(Action):
+    """Release a live partition and re-place its workload on a larger slice
+    (serving-engine migration, restart ladders)."""
+
+    released: Partition
+    inner: Action  # FreshAllocate or ReshapeFuseFission
+
+    @property
+    def profile(self) -> PartitionProfile:
+        return self.inner.profile  # type: ignore[union-attr]
+
+    def describe(self) -> str:
+        return (f"grow {self.released.profile.name} -> "
+                f"{self.inner.describe()}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Migrate(Action):
+    """Fleet level: a restarted job lands on a *different* device than its
+    previous run (the A100 job that outgrows 40GB restarting on an H100)."""
+
+    device: str
+    inner: Action
+
+    def describe(self) -> str:
+        return f"migrate to {self.device}: {self.inner.describe()}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Wait(Action):
+    """Nothing feasible right now — sleep until a finish/reconfig event
+    frees capacity (Alg. 5's SLEEP)."""
+
+    reason: str = ""
+
+    def describe(self) -> str:
+        return f"wait ({self.reason})" if self.reason else "wait"

@@ -1,0 +1,112 @@
+"""The planner's single cost model.
+
+Every placement decision in this repo — scheme B's placement ladder, the
+serving engines' grow/migrate targets, the fleet routers' device ranking —
+is a preference over the same handful of physical quantities: how many
+seconds of reconfiguration an action costs, how well the slice fits the
+memory/compute need, how much of the device's future configuration space
+(|F_s|, Algorithm 2) survives, and what idle power the choice keeps
+burning.  A policy is a *weighting* of those terms, not its own ladder.
+
+Costs compare lexicographically: ``CostModel.weights`` lists
+``(feature, weight)`` pairs in priority order and ``cost()`` returns the
+weighted tuple.  Python's tuple ordering then reproduces tiered
+preferences exactly (a strictly cheaper high-priority term always wins;
+equal terms fall through to the next), which is what lets the planner
+reproduce the deleted hand-rolled ladders bit-for-bit while remaining one
+shared scoring function.  Negative weights express "larger is better"
+(reachability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Hashable
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTerms:
+    """The measurable features of one candidate action (or device)."""
+
+    reconfig_s: float = 0.0      # reconfiguration seconds paid right now
+    ladder_rank: float = 0.0     # position in the request's profile ladder
+    disturbance: float = 0.0     # idle partitions consumed by fusion/fission
+    reach: float = 0.0           # |F_s| of the resulting FSM state
+    reach_norm: float = 0.0      # log-normalized |F_s| (cross-device scale)
+    mem_waste_gb: float = 0.0    # profile memory beyond the stated need
+    compute_deficit: float = 0.0 # unmet fraction of the compute demand
+    wake_s: float = 0.0          # wake latency if the device is power-gated
+    idle_power_w: float = 0.0    # idle draw of the hosting device
+    load: float = 0.0            # device load fraction (consolidation)
+    free_after_gb: float = 0.0   # device memory left free after the action
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Prioritized weighted terms; policies differ only in ``weights``."""
+
+    name: str
+    weights: tuple[tuple[str, float], ...]
+
+    def cost(self, terms: CostTerms) -> tuple[float, ...]:
+        return tuple(w * getattr(terms, f) for f, w in self.weights)
+
+    def explain(self, terms: CostTerms) -> str:
+        return " ".join(f"{f}={w * getattr(terms, f):g}"
+                        for f, w in self.weights)
+
+
+#: Scheme B's placement preference (paper Alg. 5 + §4.3): avoid paying a
+#: reconfiguration (reuse a tight idle slice), then follow the profile
+#: ladder (compute-satisfying tight fit before memory-only tight fit), then
+#: disturb as few idle partitions as possible (fresh carve before
+#: fusion/fission), then keep |F_s| maximal (Alg. 3's argmax).
+SCHEME_B_COST = CostModel("scheme_b", (
+    ("reconfig_s", 1.0),
+    ("ladder_rank", 1.0),
+    ("disturbance", 1.0),
+    ("reach", -1.0),
+))
+
+#: Serving-engine growth (paper §4.3 lifted to request level): the grow
+#: ladder already encodes memory need + the soft compute constraint, so
+#: rank dominates; then prefer the least disruptive mechanism, then the
+#: reachability-maximal placement.
+SERVING_GROW_COST = CostModel("serving_grow", (
+    ("ladder_rank", 1.0),
+    ("disturbance", 1.0),
+    ("reach", -1.0),
+))
+
+#: Fleet device ranking, best-fit flavour: never wake a gated device if an
+#: awake one fits, waste the least slice memory, fill the fullest device,
+#: and keep the fleet's future configuration space largest.
+BEST_FIT_DEVICE_COST = CostModel("best_fit", (
+    ("wake_s", 1.0),
+    ("mem_waste_gb", 1.0),
+    ("free_after_gb", 1.0),
+    ("reach_norm", -1.0),
+))
+
+#: Fleet device ranking, consolidation flavour: pack the busiest awake
+#: device (first-fit-decreasing in spirit), keep the cheapest idle floor
+#: awake, and wake the cheapest gated device only as a last resort.
+ENERGY_AWARE_DEVICE_COST = CostModel("energy_aware", (
+    ("wake_s", 1.0),
+    ("load", -1.0),
+    ("idle_power_w", 1.0),
+))
+
+
+def normalized_reachability(backend, state: Hashable,
+                            reach: int | None = None) -> float:
+    """Current-state reachability normalized against the empty device, in
+    log space so MIG counts (~10-150) and TPU buddy counts (~1e45) are
+    comparable.  1.0 = pristine, -> 0 as the FSM saturates."""
+    if reach is None:
+        reach = backend.reachability(state)
+    reach0 = backend.reachability(backend.initial_state())
+    if reach0 <= 1:
+        return 1.0
+    return math.log1p(reach) / math.log1p(reach0)

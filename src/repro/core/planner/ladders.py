@@ -1,0 +1,106 @@
+"""Candidate-profile ladders — the *order* in which the planner considers
+partition sizes for a request.
+
+The paper's decision procedure shows up in three flavours that used to be
+re-implemented per consumer: first placement of a job (scheme B / fleet
+dispatch), growth of a live workload (serving-engine migration), and the
+restart rungs after an OOM or an early-restart prediction (§2.3, §4.3).
+All three are ladder builders here; the planner scores the rungs with the
+shared cost model.
+"""
+
+from __future__ import annotations
+
+from repro.core.partition_manager import Partition
+from repro.core.partition_state import PartitionBackend, PartitionProfile
+from repro.core.planner.planner import PlanRequest
+
+
+def tight_profile(backend: PartitionBackend,
+                  est_mem_gb: float | None) -> PartitionProfile:
+    """Memory-only tightest fit; unknown memory starts on the smallest
+    partition (paper §2.2), an over-large estimate on the largest."""
+    if est_mem_gb is None:
+        return backend.profiles[0]
+    prof = backend.tightest_profile(est_mem_gb, compute=0.0)
+    return prof if prof is not None else backend.profiles[-1]
+
+
+def placement_ladder(backend: PartitionBackend, est_mem_gb: float | None,
+                     compute_demand: float) -> list[PartitionProfile]:
+    """Profiles to try for a fresh placement, preferred first: compute is a
+    soft constraint (§4.3) — the profile covering the job's parallelism
+    wins over memory-only tightness (4g.20gb over 3g.20gb for a half-GPU
+    DNN), with the memory-tight profile as the fallback rung."""
+    ladder: list[PartitionProfile] = []
+    if est_mem_gb is not None:
+        strong = backend.tightest_profile(est_mem_gb, compute_demand)
+        if strong is not None:
+            ladder.append(strong)
+    weak = tight_profile(backend, est_mem_gb)
+    if all(p.name != weak.name for p in ladder):
+        ladder.append(weak)
+    return ladder
+
+
+def restart_rung(backend: PartitionBackend,
+                 current: PartitionProfile) -> PartitionProfile:
+    """Next-larger-memory rung after an OOM crash (paper's 10GB -> 20GB
+    example); the largest profile has nowhere to grow and stays itself."""
+    nxt = backend.next_larger_profile(current)
+    return nxt if nxt is not None else backend.profiles[-1]
+
+
+def predicted_rung(backend: PartitionBackend, predicted_peak_gb: float,
+                   headroom: float = 1.0) -> PartitionProfile | None:
+    """Tightest rung holding a predicted peak (+ optional headroom) — the
+    early-restart target (§2.3); None when nothing on this device fits."""
+    return backend.tightest_profile(predicted_peak_gb * headroom)
+
+
+def grow_ladder(backend: PartitionBackend, current: PartitionProfile,
+                predicted_gb: float | None,
+                compute_demand: float) -> list[PartitionProfile]:
+    """Larger profiles to try, preferred first.  Memory need comes from the
+    predictor (early restart) or the next-larger restart rung (OOM restart);
+    compute is the paper's soft constraint — prefer slices that also relieve
+    decode starvation, but degrade down the compute tiers rather than fail
+    (a fragmented FSM often cannot host the compute-maximal placement)."""
+    nxt = restart_rung(backend, current)
+    need_gb = min(max(predicted_gb or 0.0, nxt.mem_gb),
+                  backend.profiles[-1].mem_gb)
+    bigger = [p for p in backend.profiles
+              if p.mem_gb > current.mem_gb and p.mem_gb >= need_gb]
+    rank = lambda p: (p.mem_gb, -p.compute_fraction)
+    strong = sorted((p for p in bigger
+                     if p.compute_fraction >= compute_demand), key=rank)
+    weak = sorted((p for p in bigger
+                   if p.compute_fraction < compute_demand), key=rank)
+    return strong + weak or [nxt]
+
+
+def place_request(backend: PartitionBackend, est_mem_gb: float | None,
+                  compute_demand: float,
+                  reconfig_cost_s: float) -> PlanRequest:
+    """A first-placement request (scheme B / fleet dispatch)."""
+    return PlanRequest(
+        ladder=placement_ladder(backend, est_mem_gb, compute_demand),
+        need_gb=est_mem_gb if est_mem_gb is not None else 0.0,
+        compute_demand=compute_demand,
+        reconfig_cost_s=reconfig_cost_s)
+
+
+def grow_request(backend: PartitionBackend, current: Partition,
+                 predicted_gb: float | None,
+                 compute_demand: float) -> PlanRequest:
+    """A grow/migrate request for a live partition (serving engines).  The
+    current slice is released first; idle reuse is off — a migration always
+    re-carves so the released space can fuse into the target."""
+    ladder = grow_ladder(backend, current.profile, predicted_gb,
+                         compute_demand)
+    return PlanRequest(ladder=ladder,
+                       need_gb=predicted_gb if predicted_gb is not None
+                       else ladder[0].mem_gb,
+                       compute_demand=compute_demand,
+                       reuse_idle=False,
+                       release=current)

@@ -1,0 +1,207 @@
+"""The partition planner: one scored-candidate search over partition
+actions (MISO, arXiv:2207.11428; optimal MIG placement, arXiv:2409.06646).
+
+``PartitionPlanner.plan`` enumerates every feasible typed action for a
+:class:`PlanRequest` — reuse an idle slice, carve a fresh one at the
+argmax-|F_s| placement, fuse/fission idle space, or wait — scores them
+with one :class:`~repro.core.planner.cost.CostModel`, and returns an
+explainable :class:`Plan`.  ``execute`` commits the winning action to the
+:class:`~repro.core.partition_manager.PartitionManager`.
+
+Planning never mutates the FSM: feasibility (including fusion/fission) is
+evaluated on hypothetical successor states through the compiled transition
+graph, so a plan that ends in :class:`~repro.core.planner.actions.Wait`
+is a true no-op on the device.  The single pass over the live-partition
+table replaces the old ``try_place`` double scan (idle-scan over all
+candidate profiles, then a second allocate loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Sequence
+
+from repro.core.partition_manager import Partition, PartitionManager
+from repro.core.partition_state import PartitionProfile
+from repro.core.planner.actions import (Action, FreshAllocate, Grow,
+                                        ReshapeFuseFission, ReuseIdle, Wait)
+from repro.core.planner.cost import CostModel, CostTerms
+
+
+@dataclasses.dataclass
+class PlanRequest:
+    """What a policy wants from the partition FSM."""
+
+    ladder: Sequence[PartitionProfile]  # candidate profiles, preferred first
+    need_gb: float = 0.0                # stated memory need (cost feature)
+    compute_demand: float = 0.0         # soft compute need (cost feature)
+    reuse_idle: bool = True             # may bind to an idle partition
+    allow_reshape: bool = True          # may fuse/fission idle partitions
+    reconfig_cost_s: float = 0.0        # setup seconds a new carve costs
+    release: Partition | None = None    # Grow: free this partition first
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One feasible action with its cost-model evaluation."""
+
+    action: Action
+    terms: CostTerms
+    cost: tuple[float, ...]
+
+
+@dataclasses.dataclass
+class Plan:
+    """The full, explainable outcome of one plan search."""
+
+    request: PlanRequest
+    model: CostModel
+    candidates: list[Candidate]
+    chosen: Candidate | None            # None => Wait
+
+    @property
+    def action(self) -> Action:
+        if self.chosen is None:
+            return Wait("no feasible placement")
+        act = self.chosen.action
+        if self.request.release is not None:
+            return Grow(self.request.release, act)
+        return act
+
+    def explain(self) -> str:
+        lines = [f"plan[{self.model.name}] over "
+                 f"{[p.name for p in self.request.ladder]}:"]
+        for cand in self.candidates:
+            mark = ">>" if cand is self.chosen else "  "
+            lines.append(f"{mark} {cand.action.describe():45s} "
+                         f"{self.model.explain(cand.terms)}")
+        if self.chosen is None:
+            lines.append(">> wait (no feasible action)")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """What executing a plan did to the device."""
+
+    partition: Partition | None
+    setup_s: float
+    action: Action
+
+
+class PartitionPlanner:
+    """Plan/execute partition actions against one PartitionManager."""
+
+    def __init__(self, pm: PartitionManager,
+                 cost_model: CostModel) -> None:
+        self.pm = pm
+        self.model = cost_model
+
+    # -- search ------------------------------------------------------------
+
+    def plan(self, request: PlanRequest,
+             model: CostModel | None = None) -> Plan:
+        model = model or self.model
+        pm = self.pm
+        backend = pm.backend
+        base_state: Hashable = pm.state
+        release = request.release
+        if release is not None:
+            base_state = backend.free(base_state, release.handle)
+
+        # ONE pass over the live table: first idle partition per profile
+        # name (dict order = creation order, as before) + the idle set the
+        # reshape would consume.
+        idle_by_name: dict[str, Partition] = {}
+        idle_parts: list[Partition] = []
+        for part in pm.live.values():
+            if part.busy or part is release:
+                continue
+            idle_parts.append(part)
+            idle_by_name.setdefault(part.profile.name, part)
+
+        reshape_state: Hashable | None = None  # computed at most once
+        candidates: list[Candidate] = []
+        for rank, profile in enumerate(request.ladder):
+            waste = profile.mem_gb - request.need_gb
+            deficit = max(0.0, request.compute_demand
+                          - profile.compute_fraction)
+            if request.reuse_idle and profile.name in idle_by_name:
+                idle = idle_by_name[profile.name]
+                candidates.append(self._candidate(
+                    model, ReuseIdle(idle), reconfig_s=0.0, rank=rank,
+                    disturbance=0, state=base_state,
+                    waste=waste, deficit=deficit))
+            placement = pm.best_placement(base_state, profile)
+            if placement is not None:
+                candidates.append(self._candidate(
+                    model, FreshAllocate(placement),
+                    reconfig_s=request.reconfig_cost_s, rank=rank,
+                    disturbance=0, state=placement.next_state,
+                    waste=waste, deficit=deficit))
+            elif request.allow_reshape and idle_parts:
+                if reshape_state is None:
+                    reshape_state = base_state
+                    for p in idle_parts:
+                        reshape_state = backend.free(reshape_state, p.handle)
+                placement = pm.best_placement(reshape_state, profile)
+                if placement is not None:
+                    candidates.append(self._candidate(
+                        model, ReshapeFuseFission(placement,
+                                                  tuple(idle_parts)),
+                        reconfig_s=request.reconfig_cost_s, rank=rank,
+                        disturbance=len(idle_parts),
+                        state=placement.next_state,
+                        waste=waste, deficit=deficit))
+
+        chosen = min(candidates, key=lambda c: c.cost) if candidates else None
+        return Plan(request=request, model=model, candidates=candidates,
+                    chosen=chosen)
+
+    def _candidate(self, model: CostModel, action: Action, *,
+                   reconfig_s: float, rank: int, disturbance: int,
+                   state: Hashable, waste: float,
+                   deficit: float) -> Candidate:
+        terms = CostTerms(reconfig_s=reconfig_s, ladder_rank=float(rank),
+                          disturbance=float(disturbance),
+                          reach=float(self.pm.reach(state)),
+                          mem_waste_gb=waste, compute_deficit=deficit)
+        return Candidate(action=action, terms=terms, cost=model.cost(terms))
+
+    # -- commit ------------------------------------------------------------
+
+    def execute(self, plan: Plan) -> PlanResult | None:
+        """Commit the plan's winning action; None when there is nothing to
+        do (Wait without a pending release)."""
+        pm = self.pm
+        request = plan.request
+        if plan.chosen is None:
+            if request.release is None:
+                return None
+            # failed grow: the search ran on hypothetical states only, so
+            # the pending release simply never happens — the live partition,
+            # the FSM state and n_reconfigs are all exactly untouched
+            return PlanResult(partition=request.release, setup_s=0.0,
+                              action=Wait("no feasible growth target"))
+
+        action = plan.chosen.action
+        if request.release is not None:
+            pm.release(request.release)
+        if isinstance(action, ReuseIdle):
+            return PlanResult(partition=action.partition, setup_s=0.0,
+                              action=action)
+        if isinstance(action, FreshAllocate):
+            part = pm._commit(action.placement)
+        else:
+            assert isinstance(action, ReshapeFuseFission)
+            for p in action.consumed:
+                pm.release(p)
+            part = pm._commit(action.placement)
+            pm.n_reconfigs += len(action.consumed)
+        return PlanResult(partition=part, setup_s=request.reconfig_cost_s,
+                          action=plan.action)
+
+    def place(self, request: PlanRequest,
+              model: CostModel | None = None) -> PlanResult | None:
+        """plan + execute in one step (the common hot path)."""
+        return self.execute(self.plan(request, model))

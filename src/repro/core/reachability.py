@@ -21,18 +21,55 @@ from typing import Hashable
 from repro.core.partition_state import (PartitionBackend, enumerate_states,
                                         saturated)
 
+#: Most device tables a process ever touches: the per-device catalogue plus
+#: a few test-local variants.  Beyond this, least-recently-inserted entries
+#: are evicted so per-test backends cannot grow the cache without bound.
+MAX_CACHED_BACKENDS = 8
+
 #: key -> (pinned backend, fcr).  Pinning the backend keeps id()-keyed
 #: entries valid (a collected backend's id could be reused); value-keyed
 #: backends (``reachability_cache_key``) share one entry per device table.
 _CACHE: dict[Hashable, tuple[PartitionBackend, dict[Hashable, int]]] = {}
+
+#: every per-backend table cache in the process (this one plus the compiled
+#: transition-graph cache in :mod:`repro.core.planner.graph`) registers here
+#: so ``clear_reachability_cache`` empties them together.
+_REGISTERED_CACHES: list[dict] = [_CACHE]
+
+
+def register_backend_cache(cache: dict) -> dict:
+    """Register another per-backend cache for shared clearing/bounding."""
+    _REGISTERED_CACHES.append(cache)
+    return cache
+
+
+def bounded_cache_insert(cache: dict, key: Hashable, value) -> None:
+    """Insert, then evict oldest entries past :data:`MAX_CACHED_BACKENDS`."""
+    cache[key] = value
+    while len(cache) > MAX_CACHED_BACKENDS:
+        cache.pop(next(iter(cache)))
+
+
+def clear_reachability_cache() -> None:
+    """Drop every cached per-backend table (reachability + transition
+    graphs).  The test suite calls this so per-test backend tables cannot
+    leak across the run."""
+    for cache in _REGISTERED_CACHES:
+        cache.clear()
+
+
+def reachability_cache_key(backend: PartitionBackend) -> Hashable:
+    """The shared cache identity: value-based when the backend provides it
+    (equivalent instances share one table), ``id()`` otherwise."""
+    key_fn = getattr(backend, "reachability_cache_key", None)
+    return key_fn() if key_fn is not None else id(backend)
 
 
 def precompute_reachability(backend: PartitionBackend,
                             max_states: int = 2_000_000
                             ) -> dict[Hashable, int]:
     """Algorithm 2 — offline |F_s| for every valid state of ``backend``."""
-    key_fn = getattr(backend, "reachability_cache_key", None)
-    key = key_fn() if key_fn is not None else id(backend)
+    key = reachability_cache_key(backend)
     if key in _CACHE:
         return _CACHE[key][1]
 
@@ -59,7 +96,7 @@ def precompute_reachability(backend: PartitionBackend,
         return out
 
     fcr = {s: len(final_set(s)) for s in states}
-    _CACHE[key] = (backend, fcr)
+    bounded_cache_insert(_CACHE, key, (backend, fcr))
     return fcr
 
 

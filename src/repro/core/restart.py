@@ -24,20 +24,23 @@ from typing import Any, Callable
 import jax
 
 from repro.core.partition_state import PartitionBackend, PartitionProfile
+from repro.core.planner.ladders import predicted_rung, restart_rung
 
 
 def oom_restart_target(backend: PartitionBackend,
                        current: PartitionProfile) -> PartitionProfile:
-    """Next-larger slice after a crash (paper: 10GB -> 20GB example)."""
-    nxt = backend.next_larger_profile(current)
-    return nxt if nxt is not None else backend.profiles[-1]
+    """Next-larger slice after a crash (paper: 10GB -> 20GB example) — the
+    first rung of the planner's growth ladder
+    (:func:`repro.core.planner.ladders.restart_rung`)."""
+    return restart_rung(backend, current)
 
 
 def early_restart_target(backend: PartitionBackend,
                          predicted_peak_gb: float,
                          headroom: float = 1.0) -> PartitionProfile | None:
-    """Tightest slice that holds the predicted peak (+ optional headroom)."""
-    return backend.tightest_profile(predicted_peak_gb * headroom)
+    """Tightest slice that holds the predicted peak (+ optional headroom) —
+    the planner's :func:`~repro.core.planner.ladders.predicted_rung`."""
+    return predicted_rung(backend, predicted_peak_gb, headroom)
 
 
 def migrate_state(state: Any, target_shardings: Any) -> Any:

@@ -18,6 +18,8 @@ import itertools
 
 from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionBackend, PartitionProfile
+from repro.core.planner import (SCHEME_B_COST, PartitionPlanner, Plan,
+                                place_request)
 from repro.core.scheduler.energy import DevicePowerModel, EnergyIntegrator
 from repro.core.scheduler.job import GB, Job
 from repro.core.scheduler.metrics import Metrics, RunRecord
@@ -141,6 +143,7 @@ class DeviceSim:
                  reconfig_cost_s: float = RECONFIG_COST_S) -> None:
         self.backend = backend
         self.pm = PartitionManager(backend)
+        self.planner = PartitionPlanner(self.pm, SCHEME_B_COST)
         self.energy = EnergyIntegrator(power)
         self.use_prediction = use_prediction
         self.policy = policy
@@ -265,37 +268,21 @@ class DeviceSim:
 
     # -- placement (scheme B's step, reusable by the fleet router) ---------
 
-    def candidate_profiles(self, job: Job) -> list[PartitionProfile]:
-        """Profiles to try for ``job``, preferred first: compute is a soft
-        constraint (§4.3) — the profile covering the job's parallelism wins
-        over memory-only tightness (4g.20gb over 3g.20gb for a half-GPU
-        DNN)."""
-        candidates: list[PartitionProfile] = []
-        if job.est_mem_gb is not None:
-            strong = self.backend.tightest_profile(job.est_mem_gb,
-                                                   job.compute_demand)
-            if strong is not None:
-                candidates.append(strong)
-        weak = _tight_profile(self.backend, job)
-        if weak.name not in [c.name for c in candidates]:
-            candidates.append(weak)
-        return candidates
+    def plan_place(self, job: Job) -> Plan:
+        """Scored-candidate placement search for ``job`` under the scheme-B
+        cost weights (tight idle reuse > fresh carve > fusion/fission, each
+        at argmax reachability) — one pass, nothing committed."""
+        return self.planner.plan(place_request(
+            self.backend, job.est_mem_gb, job.compute_demand,
+            reconfig_cost_s=self.reconfig_cost_s))
 
     def try_place(self, job: Job) -> tuple[Partition, float] | None:
-        """Tight idle partition, else create, else merge/split — the
-        scheme-B placement ladder.  Returns (partition, setup seconds) or
-        None when the device cannot host the job right now."""
-        candidates = self.candidate_profiles(job)
-        for profile in candidates:
-            idle = self.pm.idle_partition_with(profile)
-            if idle is not None:
-                return idle, 0.0
-        for profile in candidates:
-            part = (self.pm.allocate(profile)
-                    or self.pm.allocate_with_reshape(profile))
-            if part is not None:
-                return part, self.reconfig_cost_s
-        return None
+        """Plan + commit a placement.  Returns (partition, setup seconds)
+        or None when the device cannot host the job right now."""
+        result = self.planner.execute(self.plan_place(job))
+        if result is None:
+            return None
+        return result.partition, result.setup_s
 
     # -- routing scores (fleet) --------------------------------------------
 
@@ -329,14 +316,3 @@ class DeviceSim:
             n_oom=self.n_oom, n_early_restarts=self.n_early,
             n_reconfigs=self.pm.n_reconfigs, wasted_seconds=self.wasted,
             records=self.records)
-
-
-def _tight_profile(backend: PartitionBackend, job: Job) -> PartitionProfile:
-    est = job.est_mem_gb
-    if est is None:
-        # unknown memory: start on the smallest partition (paper §2.2)
-        return backend.profiles[0]
-    prof = backend.tightest_profile(est, compute=0.0)
-    if prof is None:
-        prof = backend.profiles[-1]
-    return prof

@@ -75,6 +75,7 @@ class FleetMetrics:
     wasted_seconds: float
     per_device: list[Metrics]
     records: list[tuple[str, RunRecord]]   # (device, record)
+    n_migrations: int = 0      # cross-device restarts (planner Migrate)
 
     @property
     def throughput(self) -> float:
@@ -92,7 +93,8 @@ class FleetMetrics:
                 f"({self.energy_per_job:.0f}J/job) "
                 f"gated={self.gated_seconds:.0f}s "
                 f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
-                f"early={self.n_early_restarts} reconf={self.n_reconfigs}")
+                f"early={self.n_early_restarts} reconf={self.n_reconfigs} "
+                f"migr={self.n_migrations}")
 
 
 def percentile(values: Sequence[float], q: float) -> float:

@@ -14,9 +14,10 @@ from typing import Iterable
 
 from repro.core.partition_manager import Partition
 from repro.core.partition_state import PartitionBackend
+from repro.core.planner.ladders import tight_profile
 from repro.core.scheduler.energy import DevicePowerModel
 from repro.core.scheduler.events import (EARLY_RESTART, OOM, RECONFIG_COST_S,
-                                         DeviceSim, _tight_profile)
+                                         DeviceSim)
 from repro.core.scheduler.job import Job
 from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
 from repro.core.scheduler.metrics import Metrics
@@ -73,7 +74,7 @@ class SchemeAPolicy(_SingleDevicePolicy):
         self.groups: dict[str, list[Job]] = {}
         for job in kernel.queue:
             self.groups.setdefault(
-                _tight_profile(backend, job).name, []).append(job)
+                tight_profile(backend, job.est_mem_gb).name, []).append(job)
         self.order = sorted(self.groups, key=lambda n: next(
             p.mem_gb for p in backend.profiles if p.name == n))
         self.gi = 0
@@ -106,12 +107,12 @@ class SchemeAPolicy(_SingleDevicePolicy):
             # leftover restarts larger than every original group
             group = self.pending_larger
             self.pending_larger = []
-            pname = _tight_profile(backend, group[0]).name
+            pname = tight_profile(backend, group[0].est_mem_gb).name
         # pull in restarts that now fit this group's profile
         profile = next(p for p in backend.profiles if p.name == pname)
         still_larger = []
         for j in self.pending_larger:
-            if _tight_profile(backend, j).name == pname:
+            if tight_profile(backend, j.est_mem_gb).name == pname:
                 group.append(j)
             else:
                 still_larger.append(j)
@@ -174,7 +175,9 @@ class SchemeAPolicy(_SingleDevicePolicy):
 class SchemeBPolicy(_SingleDevicePolicy):
     """Algorithm 5 — SCHEDULE_DYN_RECONFIG: FIFO order; tight idle partition,
     else create, else merge/split (fusion/fission), else SLEEP until a
-    running job finishes.
+    running job finishes.  The preference order lives in the unified
+    partition planner (``SCHEME_B_COST`` weights) behind
+    :meth:`DeviceSim.try_place`, not in this policy.
 
     Supports ONLINE arrivals: jobs with ``arrival > 0`` join the queue when
     their time comes (the paper's "scheduler receives incoming workloads");

@@ -15,6 +15,10 @@ from repro.core.scheduler.energy import (A100_POWER, H100_POWER,
 from repro.core.scheduler.events import RECONFIG_COST_S, DeviceSim
 from repro.core.tpu_slices import TpuPodBackend
 
+#: seconds to bring a power-gated device back (persistence mode + driver
+#: re-init on MIG parts; pod controller handshake on TPU slices).
+WAKE_LATENCY_S = 1.5
+
 #: model -> (backend factory, power model, reconfig seconds)
 DEVICE_CATALOGUE = {
     "a100": (MigA100Backend, A100_POWER, RECONFIG_COST_S),

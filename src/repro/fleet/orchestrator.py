@@ -24,16 +24,14 @@ from __future__ import annotations
 
 from typing import Iterable, Sequence
 
+from repro.core.planner import Migrate
 from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
 from repro.core.scheduler.job import Job
 from repro.core.scheduler.kernel import (EventKernel, SchedulingPolicy)
 from repro.core.scheduler.metrics import FleetMetrics
+from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import FleetEnergyIntegrator
 from repro.fleet.router import Router
-
-#: seconds to bring a power-gated device back (persistence mode + driver
-#: re-init on MIG parts; pod controller handshake on TPU slices).
-WAKE_LATENCY_S = 1.5
 
 
 class FleetPolicy(SchedulingPolicy):
@@ -47,19 +45,29 @@ class FleetPolicy(SchedulingPolicy):
         self.wake_latency_s = wake_latency_s
         self.energy = energy
         self.name = router.name
+        self.n_migrations = 0
+        self._last_device: dict[str, str] = {}   # job name -> device name
 
     # -- dispatch ----------------------------------------------------------
 
     def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
         for dev in self.router.rank(job, kernel.devices):
-            placed = dev.try_place(job)
-            if placed is None:
+            result = dev.planner.execute(dev.plan_place(job))
+            if result is None:
                 continue
-            part, setup = placed
+            action = result.action
+            prev = self._last_device.get(job.name)
+            if prev is not None and prev != dev.name:
+                # cross-device restart: the A100 job that outgrew 40GB
+                # landing on an H100 (paper §4.3 lifted to the fleet)
+                action = Migrate(device=dev.name, inner=action)
+                self.n_migrations += 1
+            self._last_device[job.name] = dev.name
+            setup = result.setup_s
             if dev.gated:
                 dev.ungate()
                 setup += self.wake_latency_s
-            kernel.start(dev, job, part, setup_s=setup)
+            kernel.start(dev, job, result.partition, setup_s=setup)
             return True
         return False
 
@@ -122,7 +130,8 @@ class FleetPolicy(SchedulingPolicy):
             n_early_restarts=sum(d.n_early for d in kernel.devices),
             n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices),
             wasted_seconds=sum(d.wasted for d in kernel.devices),
-            per_device=per_device, records=records)
+            per_device=per_device, records=records,
+            n_migrations=self.n_migrations)
 
 
 class FleetOrchestrator:
@@ -131,11 +140,8 @@ class FleetOrchestrator:
 
     def __init__(self, devices: Sequence[DeviceSim], router: Router,
                  wake_latency_s: float = WAKE_LATENCY_S) -> None:
-        if not devices:
-            raise ValueError("a fleet needs at least one device")
-        names = [d.name for d in devices]
-        if len(set(names)) != len(names):
-            raise ValueError(f"duplicate device names: {names}")
+        # device validation (non-empty, unique names) happens in
+        # EventKernel.__init__ when run() builds the kernel
         self.devices = list(devices)
         self.router = router
         self.wake_latency_s = wake_latency_s

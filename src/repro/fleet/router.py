@@ -1,28 +1,32 @@
 """Pluggable fleet routing policies.
 
 A router orders the feasible devices for one job; the orchestrator commits
-to the first device whose placement ladder (idle partition -> create ->
-merge/split) succeeds.  Routing is where fleet-level throughput/energy
-headroom lives (MISO schedules MIG jobs across a cluster; arXiv:2409.06646
-shows placement *across* devices is the remaining optimization surface):
+to the first device whose partition plan succeeds.  Routing is where
+fleet-level throughput/energy headroom lives (MISO schedules MIG jobs
+across a cluster; arXiv:2409.06646 shows placement *across* devices is the
+remaining optimization surface):
 
-* :class:`RoundRobinRouter` / :class:`RandomRouter` — baselines,
-* :class:`BestFitRouter` — tightest profile first, then least remaining
-  free capacity, tie-broken by the post-placement reachability score
-  (Algorithm 3's |F_s| lifted to device choice),
-* :class:`EnergyAwareRouter` — consolidation: pack the busiest awake
-  device so idle devices can be power-gated; wake the cheapest gated
-  device only when no awake device can host.
+* :class:`RoundRobinRouter` / :class:`RandomRouter` — order-only baselines,
+* :class:`BestFitRouter` / :class:`EnergyAwareRouter` — *cost-model
+  routers*: each is nothing but a set of lexicographic weights
+  (:data:`~repro.core.planner.cost.BEST_FIT_DEVICE_COST` /
+  :data:`~repro.core.planner.cost.ENERGY_AWARE_DEVICE_COST`) over the same
+  per-device features the partition planner scores (memory waste, free
+  capacity, normalized reachability, load, wake latency, idle power) —
+  device choice and on-device placement share one cost vocabulary.
 """
 
 from __future__ import annotations
 
-import math
 import random
 from typing import Sequence
 
+from repro.core.planner.cost import (BEST_FIT_DEVICE_COST, CostModel,
+                                     CostTerms, ENERGY_AWARE_DEVICE_COST,
+                                     normalized_reachability)
 from repro.core.scheduler.events import DeviceSim
 from repro.core.scheduler.job import Job
+from repro.fleet.devices import WAKE_LATENCY_S
 
 
 class Router:
@@ -70,52 +74,53 @@ class RandomRouter(Router):
         return feas
 
 
-def _reach_score(dev: DeviceSim) -> float:
-    """Current-state reachability normalized against the empty device, in
-    log space so MIG counts (~10-150) and TPU buddy counts (~1e45) are
-    comparable.  1.0 = pristine, -> 0 as the FSM saturates."""
-    reach = dev.backend.reachability(dev.pm.state)
-    reach0 = dev.backend.reachability(dev.backend.initial_state())
-    if reach0 <= 1:
-        return 1.0
-    return math.log1p(reach) / math.log1p(reach0)
+def device_cost_terms(job: Job, dev: DeviceSim,
+                      wake_s: float = WAKE_LATENCY_S) -> CostTerms:
+    """The planner cost features of routing ``job`` to ``dev``."""
+    est = job.est_mem_gb if job.est_mem_gb is not None else 0.0
+    prof = (dev.backend.tightest_profile(est, job.compute_demand)
+            or dev.backend.profiles[-1])
+    return CostTerms(
+        wake_s=wake_s if dev.gated else 0.0,
+        mem_waste_gb=prof.mem_gb - est,
+        free_after_gb=dev.free_mem_gb() - prof.mem_gb,
+        reach_norm=normalized_reachability(dev.backend, dev.pm.state,
+                                           reach=dev.pm.reach(dev.pm.state)),
+        compute_deficit=max(0.0, job.compute_demand - prof.compute_fraction),
+        load=dev.load_fraction(),
+        idle_power_w=dev.energy.model.p_idle_w)
 
 
-class BestFitRouter(Router):
-    name = "best_fit"
+class CostRouter(Router):
+    """A router that is purely a cost model over device features: rank is
+    a stable sort by the weighted lexicographic cost vector."""
+
+    cost_model: CostModel
 
     def rank(self, job: Job, devices: Sequence[DeviceSim]
              ) -> list[DeviceSim]:
-        est = job.est_mem_gb if job.est_mem_gb is not None else 0.0
-
-        def key(dev: DeviceSim):
-            prof = (dev.backend.tightest_profile(est, job.compute_demand)
-                    or dev.backend.profiles[-1])
-            waste = prof.mem_gb - est
-            free_after = dev.free_mem_gb() - prof.mem_gb
-            # smaller waste, then fill the fullest device, then keep the
-            # fleet's future configuration space (reachability) largest
-            return (dev.gated, waste, free_after, -_reach_score(dev))
-
-        return sorted(self.feasible(job, devices), key=key)
+        return sorted(self.feasible(job, devices),
+                      key=lambda d: self.cost_model.cost(
+                          device_cost_terms(job, d)))
 
 
-class EnergyAwareRouter(Router):
+class BestFitRouter(CostRouter):
+    """Tightest profile first, then fill the fullest device, tie-broken by
+    the post-placement reachability score (Algorithm 3's |F_s| lifted to
+    device choice)."""
+
+    name = "best_fit"
+    cost_model = BEST_FIT_DEVICE_COST
+
+
+class EnergyAwareRouter(CostRouter):
+    """Consolidation: pack the busiest awake device so idle devices can be
+    power-gated; wake the cheapest gated device only when no awake device
+    can host."""
+
     name = "energy_aware"
     consolidates = True
-
-    def rank(self, job: Job, devices: Sequence[DeviceSim]
-             ) -> list[DeviceSim]:
-        feas = self.feasible(job, devices)
-        awake = [d for d in feas if not d.gated]
-        gated = [d for d in feas if d.gated]
-        # pack the busiest awake device first (first-fit-decreasing in
-        # spirit); among equals keep the cheapest idle floor awake
-        awake.sort(key=lambda d: (-d.load_fraction(),
-                                  d.energy.model.p_idle_w))
-        # wake the device with the smallest idle draw only as a last resort
-        gated.sort(key=lambda d: d.energy.model.p_idle_w)
-        return awake + gated
+    cost_model = ENERGY_AWARE_DEVICE_COST
 
 
 def make_router(name: str, seed: int = 0) -> Router:

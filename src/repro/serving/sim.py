@@ -13,9 +13,9 @@ target.  This module simulates that regime at request granularity:
 * per-iteration KV-cache growth feeds the same
   :class:`~repro.core.memory.timeseries.PeakMemoryPredictor` the batch
   scheduler uses; when the converged prediction exceeds the partition the
-  engine *early-restarts* onto a larger slice
-  (:func:`~repro.core.restart.early_restart_target` + partition
-  fission/fusion through the shared :class:`PartitionManager`), paying a
+  engine *early-restarts* onto a larger slice through the shared partition
+  planner (a :class:`~repro.core.planner.actions.Grow` plan over the
+  restart ladder, scored by ``SERVING_GROW_COST``), paying a
   reconfiguration + KV-rebuild (re-prefill) cost instead of crashing
   mid-iteration and losing work,
 * SLO metrics come out the other end: TTFT, TPOT, p99 end-to-end
@@ -39,7 +39,8 @@ import numpy as np
 from repro.core.memory.timeseries import PeakMemoryPredictor
 from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionProfile
-from repro.core.restart import oom_restart_target
+from repro.core.planner import (SERVING_GROW_COST, PartitionPlanner, Wait,
+                                grow_request)
 from repro.core.scheduler.energy import EnergyIntegrator
 from repro.core.scheduler.job import GB
 from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
@@ -211,6 +212,7 @@ class ServingDevice:
         self.name = name or model
         self.backend = backend_cls()
         self.pm = PartitionManager(self.backend)
+        self.planner = PartitionPlanner(self.pm, SERVING_GROW_COST)
         self.energy = EnergyIntegrator(power)
         self.reconfig_s = reconfig_s
         self.t = 0.0
@@ -418,60 +420,29 @@ class EngineSim:
         return self.device.backend.next_larger_profile(
             self.partition.profile) is not None
 
-    def _grow_candidates(self, predicted_gb: float | None
-                         ) -> list[PartitionProfile]:
-        """Larger profiles to try, preferred first.  Memory need comes from
-        the predictor (early restart) or the next-larger ladder rung (OOM
-        restart, paper's 10GB->20GB example); compute is the paper's soft
-        constraint — prefer slices that also relieve decode starvation, but
-        degrade down the compute tiers rather than fail (a fragmented FSM
-        often cannot host the compute-maximal placement)."""
-        backend = self.device.backend
-        cur = self.partition.profile
-        nxt = oom_restart_target(backend, cur)
-        need_gb = min(max(predicted_gb or 0.0, nxt.mem_gb),
-                      backend.profiles[-1].mem_gb)
-        bigger = [p for p in backend.profiles
-                  if p.mem_gb > cur.mem_gb and p.mem_gb >= need_gb]
-        want_c = self.cfg.engine_compute_demand
-        rank = lambda p: (p.mem_gb, -p.compute_fraction)
-        strong = sorted((p for p in bigger
-                         if p.compute_fraction >= want_c), key=rank)
-        weak = sorted((p for p in bigger
-                       if p.compute_fraction < want_c), key=rank)
-        return strong + weak or [nxt]
-
     def _begin_migration(self, kernel: EventKernel, crashed: bool,
                          predicted_gb: float | None = None) -> bool:
-        """Checkpointless restart onto a larger slice: release the current
-        partition, fuse/fission idle space into the target profile, pay the
-        reconfiguration plus the KV rebuild (re-prefill of every in-flight
-        sequence) — and a crash penalty if this is a post-OOM restart.
-        Returns False (engine unchanged) when neighbours hold the space."""
+        """Checkpointless restart onto a larger slice, through the shared
+        partition planner: the growth ladder (predictor need or OOM restart
+        rung, compute as the paper's soft constraint) is scored under the
+        serving cost weights, then the winning Grow action releases the
+        current partition and fuses/fissions space into the target — paying
+        the reconfiguration plus the KV rebuild (re-prefill of every
+        in-flight sequence), and a crash penalty if this is a post-OOM
+        restart.  Returns False when neighbours hold the space — the plan
+        degenerates to Wait and the engine's slice is left untouched."""
         dev = self.device
-        old_profile = self.partition.profile
-        n_reconfigs_before = dev.pm.n_reconfigs
-        dev.pm.release(self.partition)
-        part = None
-        for target in self._grow_candidates(predicted_gb):
-            part = (dev.pm.allocate(target)
-                    or dev.pm.allocate_with_reshape(target))
-            if part is not None:
-                break
-        if part is None:
-            # neighbours hold the space: stay on the old profile (a failed
-            # probe is a no-op on the device — don't count the restore as a
-            # reconfiguration), back off, and let the caller shed load
-            part = (dev.pm.allocate(old_profile)
-                    or dev.pm.allocate_with_reshape(old_profile))
-            assert part is not None, "restoring the engine slice must succeed"
-            dev.pm.n_reconfigs = n_reconfigs_before
-            self.partition = part
-            part.busy = True
+        result = dev.planner.place(grow_request(
+            dev.backend, self.partition, predicted_gb,
+            self.cfg.engine_compute_demand))
+        assert result is not None and result.partition is not None
+        self.partition = result.partition
+        self.partition.busy = True
+        if isinstance(result.action, Wait):
+            # neighbours hold the space: back off and let the caller shed
+            # load (the probe counted no reconfiguration)
             self._grow_cooldown = max(self.cfg.scale_up_queue_ticks, 10)
             return False
-        self.partition = part
-        part.busy = True
         for r in self.running:
             r.in_prefill = True              # KV is rebuilt on the new slice
         rebuild_tokens = sum(r.kv_tokens for r in self.running)

@@ -3,8 +3,9 @@
 Loaded by the root ``conftest.py`` ONLY when the real package is absent
 (hermetic containers where installing is not allowed).  It implements the
 small surface the test-suite uses — ``given``, ``settings`` and the
-``integers`` / ``floats`` / ``sampled_from`` / ``lists`` / ``tuples`` /
-``randoms`` strategies — by drawing a fixed pseudo-random sample per
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` / ``lists`` /
+``tuples`` / ``randoms`` strategies — by drawing a fixed pseudo-random
+sample per
 example index, so runs are reproducible.  It does no shrinking and no
 coverage-guided search; install real hypothesis (``requirements-dev.txt``)
 for that.
@@ -42,6 +43,10 @@ def _floats(min_value=None, max_value=None, **_kw) -> SearchStrategy:
     return SearchStrategy(lambda rnd: rnd.uniform(lo, hi))
 
 
+def _booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
 def _sampled_from(elements) -> SearchStrategy:
     elements = list(elements)
     return SearchStrategy(lambda rnd: rnd.choice(elements))
@@ -68,6 +73,7 @@ def _randoms(**_kw) -> SearchStrategy:
 
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.SearchStrategy = SearchStrategy
+strategies.booleans = _booleans
 strategies.integers = _integers
 strategies.floats = _floats
 strategies.sampled_from = _sampled_from
@@ -79,6 +85,13 @@ strategies.randoms = _randoms
 def given(*garg_strategies, **gkw_strategies):
     def decorate(fn):
         fallback = getattr(fn, "_shim_max_examples", None)
+        params = list(inspect.signature(fn).parameters.values())
+        n_strategy = len(garg_strategies) + len(gkw_strategies)
+        keep = params[:len(params) - n_strategy]
+        # positional strategies fill the TRAILING parameters; bind them by
+        # name so pytest fixtures (passed as kwargs) never collide.
+        pos_names = [p.name for p in params[len(keep):len(keep)
+                                            + len(garg_strategies)]]
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
@@ -87,18 +100,16 @@ def given(*garg_strategies, **gkw_strategies):
             for i in range(n):
                 # fixed per-example seed: reruns are bit-identical
                 rnd = random.Random(0x5DEECE66D ^ (i * 2654435761))
-                drawn = [s.draw(rnd) for s in garg_strategies]
+                drawn = {name: s.draw(rnd)
+                         for name, s in zip(pos_names, garg_strategies)}
                 drawn_kw = {k: s.draw(rnd)
                             for k, s in gkw_strategies.items()}
-                fn(*args, *drawn, **kwargs, **drawn_kw)
+                fn(*args, **kwargs, **drawn, **drawn_kw)
 
         # pytest must not see the strategy-bound parameters as fixtures:
         # drop __wrapped__ (inspect.signature follows it) and expose only
-        # the parameters NOT filled by strategies (typically just `self`).
+        # the parameters NOT filled by strategies (`self` plus fixtures).
         del wrapper.__wrapped__
-        params = list(inspect.signature(fn).parameters.values())
-        keep = params[:len(params) - len(garg_strategies)
-                      - len(gkw_strategies)]
         wrapper.__signature__ = inspect.Signature(keep)
         wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
         return wrapper

@@ -113,3 +113,97 @@ def test_legacy_loops_are_gone():
     for name in ("run_baseline", "run_scheme_a", "run_scheme_b",
                  "ClusterSim"):
         assert not hasattr(events, name)
+
+
+# ---------------------------------------------------------------------------
+# Planner-path parity: the unified partition planner reproduces the
+# pre-planner placement ladders bit-for-bit.
+# ---------------------------------------------------------------------------
+# The values below were produced by the pre-planner implementations — the
+# ``DeviceSim.try_place`` double scan, ``EngineSim._grow_candidates`` +
+# ``_begin_migration`` probe/rollback, and the routers' bespoke sort keys —
+# captured at full float repr precision immediately before the planner
+# refactor.  The planner-backed paths must reproduce every metric with
+# ``==`` (no tolerance): the cost-model weights are required to encode the
+# exact same preference order the deleted ladders implemented.
+
+SERVING_GOLDEN = {
+    "a100_dynamic_pred": {"policy": "dynamic+pred", "n_requests": 120, "n_completed": 120, "n_dropped": 0, "makespan": 115.01741348557375, "energy_j": 25141.093598847547, "mean_ttft": 0.0977204101215538, "p99_ttft": 0.29630851133185954, "mean_tpot": 0.04406577814543645, "p99_tpot": 0.07578122056737577, "p99_latency": 54.03158124656856, "goodput_rps": 1.0433202796292336, "throughput_rps": 1.0433202796292336, "tokens_per_s": 261.8212241729562, "n_oom": 0, "n_early_restarts": 2, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 4},
+    "a100_dynamic_nopred": {"policy": "dynamic", "n_requests": 200, "n_completed": 200, "n_dropped": 0, "makespan": 136.21663371565307, "energy_j": 28949.71833650161, "mean_ttft": 0.19788162122924674, "p99_ttft": 2.544697680308088, "mean_tpot": 0.05752617570840332, "p99_tpot": 0.1149469316239317, "p99_latency": 59.16338925627233, "goodput_rps": 1.4682494681045504, "throughput_rps": 1.4682494681045504, "tokens_per_s": 345.93425718011315, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 2, "n_reconfigs": 4},
+    "h100_dynamic_nopred": {"policy": "dynamic", "n_requests": 200, "n_completed": 200, "n_dropped": 0, "makespan": 136.48970098557697, "energy_j": 75446.43293105836, "mean_ttft": 0.8823381547601349, "p99_ttft": 8.794716416936573, "mean_tpot": 0.08679876451384778, "p99_tpot": 0.2367859931547612, "p99_latency": 67.30626550834688, "goodput_rps": 1.3700667423966333, "throughput_rps": 1.4653120239536186, "tokens_per_s": 345.24216596371207, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 4, "n_reconfigs": 6},
+    "a100_static": {"policy": "static", "n_requests": 120, "n_completed": 120, "n_dropped": 0, "makespan": 128.0362114022536, "energy_j": 26555.45962712428, "mean_ttft": 0.08751606312142979, "p99_ttft": 0.1402094916094089, "mean_tpot": 0.04229120417324757, "p99_tpot": 0.05138595021645031, "p99_latency": 48.733239993180085, "goodput_rps": 0.9372348547786524, "throughput_rps": 0.9372348547786524, "tokens_per_s": 235.19908680670284, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 2},
+}
+
+_SERVING_CASES = {
+    "a100_dynamic_pred": (["a100"], dict(policy="dynamic", n_engines=2,
+                                         use_prediction=True), 120),
+    "a100_dynamic_nopred": (["a100"], dict(policy="dynamic", n_engines=2,
+                                           use_prediction=False), 200),
+    "h100_dynamic_nopred": (["h100"], dict(policy="dynamic", n_engines=2,
+                                           use_prediction=False), 200),
+    "a100_static": (["a100"], dict(policy="static", n_engines=2), 120),
+}
+
+FLEET_GOLDEN = {
+    "energy_aware": {"makespan": 60.46047964585671, "energy_j": 20036.10071391973, "gated_seconds": 79.1796847205041, "mean_jct": 5.961944444444445, "n_oom": 0, "n_early_restarts": 0, "n_reconfigs": 9, "wasted_seconds": 0.0},
+    "best_fit": {"makespan": 59.260479645856705, "energy_j": 24244.413734483493, "gated_seconds": 0.0, "mean_jct": 5.419861111111113, "n_oom": 0, "n_early_restarts": 0, "n_reconfigs": 17, "wasted_seconds": 0.0},
+    "round_robin": {"makespan": 59.16836030468113, "energy_j": 25459.32165636601, "gated_seconds": 0.0, "mean_jct": 6.047569444444444, "n_oom": 0, "n_early_restarts": 0, "n_reconfigs": 17, "wasted_seconds": 0.0},
+}
+
+
+@pytest.mark.parametrize("case", list(SERVING_GOLDEN), ids=str)
+def test_planner_serving_reproduces_pre_planner_metrics(case):
+    from repro.serving.sim import (ServingConfig, poisson_requests,
+                                   run_serving)
+    devices, cfg_kw, n = _SERVING_CASES[case]
+    metrics = run_serving(devices, ServingConfig(**cfg_kw),
+                          poisson_requests(n, rate_per_s=2.0, seed=11))
+    for field, want in SERVING_GOLDEN[case].items():
+        assert getattr(metrics, field) == want, (
+            f"serving/{case}: {field} drifted from the pre-planner ladder: "
+            f"{getattr(metrics, field)!r} != {want!r}")
+
+
+@pytest.mark.parametrize("router", list(FLEET_GOLDEN), ids=str)
+def test_planner_fleet_reproduces_pre_planner_metrics(router):
+    from repro.core.scheduler.job import rodinia_job
+    from repro.fleet import (make_fleet, make_router, poisson_arrivals,
+                             run_fleet)
+    names = ["myocyte", "gaussian", "srad", "euler3d", "particlefilter",
+             "nw", "lavamd", "hotspot3d", "cfd_full"]
+    jobs = poisson_arrivals([rodinia_job(names[i % len(names)], i)
+                             for i in range(24)], rate_per_s=0.4, seed=13)
+    metrics = run_fleet(make_fleet(["a100", "a100", "h100"]),
+                        make_router(router), jobs)
+    for field, want in FLEET_GOLDEN[router].items():
+        assert getattr(metrics, field) == want, (
+            f"fleet/{router}: {field} drifted from the pre-planner router: "
+            f"{getattr(metrics, field)!r} != {want!r}")
+
+
+def test_bespoke_ladders_are_deleted():
+    """The four pre-planner placement ladders are gone — not aliased: the
+    try_place double scan, the scheme-B candidate builder, the serving grow
+    ladder and the routers' bespoke sort keys all live in core/planner now."""
+    import inspect
+
+    import repro.core.scheduler.events as events
+    import repro.fleet.router as router
+    from repro.serving.sim import EngineSim
+
+    # 1. DeviceSim.try_place's double scan -> one planner pass
+    assert not hasattr(events.DeviceSim, "candidate_profiles")
+    assert not hasattr(events, "_tight_profile")
+    assert "planner" in inspect.getsource(events.DeviceSim.try_place)
+    # 2. scheme B consumes the same planner path (no ladder in policies)
+    import repro.core.scheduler.policies as policies
+    assert "idle_partition_with" not in inspect.getsource(policies)
+    # 3. the serving grow ladder
+    assert not hasattr(EngineSim, "_grow_candidates")
+    assert "planner" in inspect.getsource(EngineSim._begin_migration)
+    # 4. the routers: pure cost-model weights, no hand-rolled rank/sort
+    assert not hasattr(router, "_reach_score")
+    assert "rank" not in router.BestFitRouter.__dict__
+    assert "rank" not in router.EnergyAwareRouter.__dict__
+    assert router.BestFitRouter.cost_model.name == "best_fit"
+    assert router.EnergyAwareRouter.cost_model.name == "energy_aware"

@@ -86,6 +86,49 @@ class TestMigSpanInvariants:
         assert pm.allocate_with_reshape(mig.profiles[-1]) is None
         assert len(pm.live) == mig.n_gpc          # nothing was destroyed
 
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              st.integers(min_value=0, max_value=7),
+                              st.booleans()),
+                    min_size=3, max_size=30))
+    def test_property_failed_reshape_is_exact_noop(self, mig, ops):
+        """Random allocate/release/allocate_with_reshape sequences on both
+        MIG generations: a failed reshape must restore the exact FSM state,
+        the identical live Partition objects (same pids, handles, busy
+        flags) and the reconfiguration count."""
+        pm = PartitionManager(mig)
+        profiles = mig.profiles
+        for kind, sel, busy in ops:
+            if kind == 0:          # allocate a profile, maybe pin it busy
+                part = pm.allocate(profiles[sel % len(profiles)])
+                if part is not None:
+                    part.busy = busy
+            elif kind == 1:        # release an idle partition
+                idle = [p for p in pm.live.values() if not p.busy]
+                if idle:
+                    pm.release(idle[sel % len(idle)])
+            else:                  # fusion/fission, biased toward failure
+                prof = profiles[-1 - (sel % 2)]
+                before_state = pm.state
+                before_live = dict(pm.live)
+                before_fields = {pid: (p.profile.name, p.handle, p.busy)
+                                 for pid, p in pm.live.items()}
+                before_n = pm.n_reconfigs
+                part = pm.allocate_with_reshape(prof)
+                if part is None:
+                    assert pm.state == before_state
+                    assert pm.live.keys() == before_live.keys()
+                    assert all(pm.live[pid] is before_live[pid]
+                               for pid in before_live)
+                    assert {pid: (p.profile.name, p.handle, p.busy)
+                            for pid, p in pm.live.items()} == before_fields
+                    assert pm.n_reconfigs == before_n
+                else:
+                    part.busy = busy
+        for p in list(pm.live.values()):
+            pm.release(p)
+        assert pm.state == mig.initial_state()
+
 
 class TestMigA100:
     def test_profile_table_matches_paper(self, a100):

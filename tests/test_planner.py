@@ -1,0 +1,315 @@
+"""Tests for the unified partition planner (core/planner/): the compiled
+transition graph, the cost model, plan search/execution, and the planner's
+exact equivalence with the pre-planner placement ladder."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reachability
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.mig_span import MigSpanBackend
+from repro.core.partition_manager import PartitionManager
+from repro.core.partition_state import enumerate_states
+from repro.core.planner import (SCHEME_B_COST, SERVING_GROW_COST, CostModel,
+                                CostTerms, FreshAllocate, Grow,
+                                PartitionPlanner, ReshapeFuseFission,
+                                ReuseIdle, Wait, compile_transition_graph,
+                                grow_ladder, grow_request, place_request,
+                                placement_ladder)
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.events import DeviceSim
+from repro.core.scheduler.job import Job
+
+
+@pytest.fixture(scope="module")
+def a100():
+    return MigA100Backend()
+
+
+@pytest.fixture(scope="module", params=[MigA100Backend, MigH100Backend],
+                ids=["a100", "h100"])
+def mig(request):
+    return request.param()
+
+
+def _profile(backend, name):
+    return next(p for p in backend.profiles if p.name == name)
+
+
+class TestTransitionGraph:
+    def test_graph_matches_online_enumeration_exhaustively(self, mig):
+        """Every (state, profile) pair: the compiled placements and the
+        precomputed argmax-|F_s| equal the seed online computation."""
+        graph = compile_transition_graph(mig)
+        assert graph is not None
+        for state in enumerate_states(mig):
+            for profile in mig.profiles:
+                online = mig.enumerate_placements(state, profile)
+                assert tuple(online) == graph.placements(state, profile)
+                best = (max(online, key=lambda pl: mig.reachability(
+                    pl.next_state)) if online else None)
+                assert best == graph.best_placement(state, profile)
+
+    def test_graph_is_cached_per_device_table(self):
+        g1 = compile_transition_graph(MigA100Backend())
+        g2 = compile_transition_graph(MigA100Backend())
+        assert g1 is g2    # value-keyed: equivalent instances share a graph
+
+    def test_unsupported_backend_compiles_to_none(self):
+        from repro.core.tpu_slices import TpuPodBackend
+        assert compile_transition_graph(TpuPodBackend()) is None
+        # ... and the manager transparently falls back to enumeration
+        pm = PartitionManager(TpuPodBackend())
+        assert pm.graph is None
+        assert pm.allocate(pm.backend.profiles[0]) is not None
+
+    def test_manager_allocate_uses_graph(self, a100):
+        pm = PartitionManager(a100)
+        assert pm.allocate(a100.profiles[0]) is not None
+        assert pm.graph is not None
+        assert pm.graph.n_states == 308      # the A100 FSM, interned
+
+    def test_cache_clear_and_bound(self):
+        reachability.clear_reachability_cache()
+        compile_transition_graph(MigA100Backend())
+        assert len(reachability._CACHE) == 1
+        reachability.clear_reachability_cache()
+        assert not reachability._CACHE
+        # bounded: distinct tiny device tables beyond the bound evict LRU
+        for n in range(reachability.MAX_CACHED_BACKENDS + 3):
+            b = MigSpanBackend(f"tiny{n}", {"1g": (1, 1, (0,))},
+                               n_gpc=1, n_mem_slices=1, mem_slice_gb=1.0 + n)
+            compile_transition_graph(b)
+        assert len(reachability._CACHE) <= reachability.MAX_CACHED_BACKENDS
+        reachability.clear_reachability_cache()
+
+
+class TestCostModel:
+    def test_lexicographic_priorities(self):
+        model = CostModel("m", (("reconfig_s", 1.0), ("reach", -1.0)))
+        cheap = model.cost(CostTerms(reconfig_s=0.0, reach=1.0))
+        rich = model.cost(CostTerms(reconfig_s=0.3, reach=100.0))
+        # a strictly cheaper high-priority term beats any low-priority gain
+        assert cheap < rich
+
+    def test_negative_weight_prefers_larger(self):
+        model = CostModel("m", (("reach", -1.0),))
+        assert model.cost(CostTerms(reach=19.0)) < model.cost(
+            CostTerms(reach=3.0))
+
+    def test_explain_names_weighted_terms(self):
+        s = SCHEME_B_COST.explain(CostTerms(reconfig_s=0.3, reach=7.0))
+        assert "reconfig_s=0.3" in s and "reach=-7" in s
+
+
+class TestPlanSearch:
+    def test_reuse_idle_beats_fresh_carve(self, a100):
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        idle = pm.allocate(_profile(a100, "3g.20gb"))
+        plan = planner.plan(place_request(a100, 18.0, 0.45,
+                                          reconfig_cost_s=0.3))
+        assert isinstance(plan.chosen.action, ReuseIdle)
+        assert plan.chosen.action.partition is idle
+        # both mechanisms were considered and scored
+        kinds = {type(c.action) for c in plan.candidates}
+        assert kinds == {ReuseIdle, FreshAllocate}
+        result = planner.execute(plan)
+        assert result.partition is idle and result.setup_s == 0.0
+
+    def test_fresh_carve_pays_reconfig_seconds(self, a100):
+        dev = DeviceSim(a100, A100_POWER)
+        placed = dev.try_place(Job(name="j", mem_gb=18.0, t_kernel=1.0,
+                                   compute_demand=0.45, est_mem_gb=18.0))
+        assert placed is not None
+        part, setup = placed
+        assert part.profile.mem_gb == 20.0
+        assert setup == dev.reconfig_cost_s
+
+    def test_fusion_fission_when_fragmented(self, a100):
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        for _ in range(7):
+            assert pm.allocate(a100.profiles[0]) is not None
+        plan = planner.plan(place_request(a100, 20.0, 0.0,
+                                          reconfig_cost_s=0.3))
+        assert isinstance(plan.chosen.action, ReshapeFuseFission)
+        assert len(plan.chosen.action.consumed) == 7
+        result = planner.execute(plan)
+        assert result.partition.profile.mem_gb == 20.0
+        # the idle partitions were consumed by the fusion
+        assert len(pm.live) == 1
+
+    def test_wait_when_nothing_feasible(self, a100):
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        for _ in range(7):
+            pm.allocate(a100.profiles[0]).busy = True
+        plan = planner.plan(place_request(a100, 20.0, 0.0,
+                                          reconfig_cost_s=0.3))
+        assert plan.chosen is None
+        assert isinstance(plan.action, Wait)
+        assert planner.execute(plan) is None
+        assert len(pm.live) == 7             # true no-op
+
+    def test_explain_is_human_readable(self, a100):
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        plan = planner.plan(place_request(a100, 18.0, 0.45,
+                                          reconfig_cost_s=0.3))
+        text = plan.explain()
+        assert "scheme_b" in text and ">>" in text
+        assert "allocate" in text and "reach=" in text
+
+    def test_grow_releases_then_recarves(self, a100):
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        engine = pm.allocate(_profile(a100, "2g.10gb"))
+        engine.busy = True
+        result = planner.place(grow_request(a100, engine,
+                                            predicted_gb=18.0,
+                                            compute_demand=0.5))
+        assert isinstance(result.action, Grow)
+        assert result.partition.profile.mem_gb >= 20.0
+        assert len(pm.live) == 1             # the old slice was released
+
+    def test_failed_grow_is_exact_no_op(self, a100):
+        """When neighbours hold the space the grow plan degenerates to
+        Wait: the engine keeps its exact slice (same Partition object, same
+        handle), the FSM state is untouched and the probe counts zero
+        reconfigurations."""
+        pm = PartitionManager(a100)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        engine = pm.allocate(_profile(a100, "4g.20gb"))
+        engine.busy = True
+        blocker = pm.allocate(_profile(a100, "3g.20gb"))
+        blocker.busy = True
+        n_before = pm.n_reconfigs
+        state_before = pm.state
+        result = planner.place(grow_request(a100, engine,
+                                            predicted_gb=40.0,
+                                            compute_demand=0.5))
+        assert isinstance(result.action, Wait)
+        assert result.partition is engine            # not even re-pinned
+        assert pm.state == state_before
+        assert pm.n_reconfigs == n_before
+        assert len(pm.live) == 2
+
+
+class TestLadders:
+    def test_placement_ladder_compute_strong_first(self, a100):
+        ladder = placement_ladder(a100, 18.0, 0.5)
+        assert [p.name for p in ladder] == ["4g.20gb", "3g.20gb"]
+
+    def test_placement_ladder_unknown_memory_starts_smallest(self, a100):
+        assert [p.name for p in placement_ladder(a100, None, 0.9)] \
+            == ["1g.5gb"]
+
+    def test_grow_ladder_prefers_compute_within_memory_rung(self):
+        h100 = MigH100Backend()
+        cur = _profile(h100, "1g.10gb")
+        ladder = grow_ladder(h100, cur, predicted_gb=None,
+                             compute_demand=0.5)
+        # every rung is strictly larger in memory; compute-satisfying
+        # profiles come first, then the degraded tiers
+        assert all(p.mem_gb > cur.mem_gb for p in ladder)
+        strong = [p for p in ladder if p.compute_fraction >= 0.5]
+        assert ladder[:len(strong)] == strong
+
+    def test_grow_ladder_respects_predicted_need(self, a100):
+        cur = _profile(a100, "2g.10gb")
+        ladder = grow_ladder(a100, cur, predicted_gb=35.0,
+                             compute_demand=0.5)
+        assert [p.name for p in ladder] == ["7g.40gb"]
+
+
+class TestPlannerMatchesPrePlannerLadder:
+    """Drive a planner-backed device and a verbatim copy of the deleted
+    ``try_place`` double scan through identical random workloads — every
+    placement decision must be identical."""
+
+    @staticmethod
+    def _reference_try_place(pm, backend, job, reconfig_cost_s):
+        # the pre-planner ladder, kept verbatim as the oracle
+        candidates = []
+        if job.est_mem_gb is not None:
+            strong = backend.tightest_profile(job.est_mem_gb,
+                                              job.compute_demand)
+            if strong is not None:
+                candidates.append(strong)
+        est = job.est_mem_gb
+        weak = (backend.profiles[0] if est is None
+                else (backend.tightest_profile(est, 0.0)
+                      or backend.profiles[-1]))
+        if weak.name not in [c.name for c in candidates]:
+            candidates.append(weak)
+        for profile in candidates:
+            idle = pm.idle_partition_with(profile)
+            if idle is not None:
+                return idle, 0.0
+        for profile in candidates:
+            part = (pm.allocate(profile)
+                    or pm.allocate_with_reshape(profile))
+            if part is not None:
+                return part, reconfig_cost_s
+        return None
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(
+        st.sampled_from([2.0, 4.5, 8.0, 18.0, 24.0, 38.0, 60.0, None]),
+        st.floats(min_value=0.0, max_value=1.0),
+        st.booleans(),                     # keep the placed partition busy
+        st.integers(min_value=0, max_value=5)),  # release selector
+        min_size=1, max_size=20))
+    def test_property_identical_placements(self, mig, ops):
+        pm_new = PartitionManager(mig)
+        planner = PartitionPlanner(pm_new, SCHEME_B_COST)
+        pm_ref = PartitionManager(mig)
+        for i, (est, demand, busy, rel) in enumerate(ops):
+            if est is not None and est > mig.total_mem_gb():
+                est = mig.total_mem_gb()
+            job = Job(name=f"j{i}", mem_gb=est or 1.0, t_kernel=1.0,
+                      compute_demand=demand, est_mem_gb=est)
+            req = place_request(mig, job.est_mem_gb, job.compute_demand,
+                                reconfig_cost_s=0.3)
+            result = planner.execute(planner.plan(req))
+            ref = self._reference_try_place(pm_ref, mig, job, 0.3)
+            if ref is None:
+                assert result is None
+            else:
+                ref_part, ref_setup = ref
+                assert result is not None
+                assert result.setup_s == ref_setup
+                assert result.partition.profile.name == ref_part.profile.name
+                assert result.partition.handle == ref_part.handle
+                result.partition.busy = busy
+                ref_part.busy = busy
+            assert pm_new.state == pm_ref.state
+            assert pm_new.n_reconfigs == pm_ref.n_reconfigs
+            # occasionally release the same idle partition on both sides
+            idle_new = [p for p in pm_new.live.values() if not p.busy]
+            idle_ref = [p for p in pm_ref.live.values() if not p.busy]
+            if idle_new and rel % 3 == 0:
+                k = rel % len(idle_new)
+                pm_new.release(idle_new[k])
+                pm_ref.release(next(p for p in idle_ref
+                                    if p.handle == idle_new[k].handle))
+                assert pm_new.state == pm_ref.state
+
+
+def test_fleet_cross_device_restart_is_typed_migrate():
+    """An A100 job that outgrows 40GB restarts on the H100 — the fleet
+    counts it as a planner Migrate action."""
+    from repro.fleet import make_fleet, make_router, run_fleet
+    big = Job(name="big", mem_gb=60.0, t_kernel=5.0, compute_demand=0.8,
+              est_mem_gb=None)
+    small = [Job(name=f"s{i}", mem_gb=4.0, t_kernel=2.0,
+                 compute_demand=0.3, est_mem_gb=4.0) for i in range(4)]
+    m = run_fleet(make_fleet(["a100", "h100"]), make_router("best_fit"),
+                  [big] + small)
+    assert m.n_migrations >= 1
+    final = [(d, r) for d, r in m.records if r.job == "big"][-1]
+    assert final[0] == "h100-0" and final[1].outcome == "done"
