@@ -3,8 +3,6 @@ workloads), including the with/without-prediction ablation."""
 
 from __future__ import annotations
 
-import time
-
 from repro.core.mig_a100 import make_backend
 from repro.core.scheduler.energy import A100_POWER
 from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
@@ -74,8 +72,8 @@ def run(csv_rows: list) -> None:
               f"energy +{100 * en:.1f}%")
         csv_rows.append((f"fig4_llm.{kind}.pred_thpt_gain_pct", 0.0,
                          f"{100 * (thpt - 1):.2f}"))
-    print(f"\nmean over dynamic workloads (paper: +25.13% thpt, "
-          f"+6.96% energy, +20.73% util):")
+    print("\nmean over dynamic workloads (paper: +25.13% thpt, "
+          "+6.96% energy, +20.73% util):")
     print(f"  thpt +{100 * sum(thpt_gains) / len(thpt_gains):.2f}%  "
           f"energy +{100 * sum(energy_gains) / len(energy_gains):.2f}%  "
           f"util +{100 * sum(util_gains) / len(util_gains):.2f}%")

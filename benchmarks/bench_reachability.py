@@ -12,7 +12,7 @@ from repro.core.partition_state import enumerate_states
 from repro.core.reachability import (fully_configured_states,
                                      precompute_reachability)
 from repro.core.partition_manager import PartitionManager
-from repro.core.tpu_slices import make_backend as tpu_backend, f_configs
+from repro.core.tpu_slices import make_backend as tpu_backend
 
 
 def run(csv_rows: list) -> None:

@@ -1,0 +1,201 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+    python benchmarks/compare.py --results bench-results [--baseline-dir .]
+                                 [--max-regression 0.20]
+
+Each benchmark writes one machine-readable ``BENCH_<name>.json`` (see
+``benchmarks/run.py``); the repo commits a baseline copy of the watched
+suites at the root.  This gate re-reads both and fails (exit 1) when any
+*watched* metric — deterministic simulation outcomes like dollars saved,
+throughput ratios, SLO tails, plus the planner's machine-normalized
+speedup ratio — regresses by more than ``--max-regression`` (default 20%)
+relative to its baseline.  Raw wall-clock timings are deliberately not
+watched: they vary by runner far more than 20%.
+
+Baselines carry a ``schema_version`` and the git SHA they were generated
+at; a baseline whose schema differs from the fresh run's (the layout
+``benchmarks/run.py`` writes today) is refused — regenerate it with
+``python -m benchmarks.run`` and recommit — rather than silently compared.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+#: bench name -> [(row name, direction)]; direction says which way is
+#: better, so a "regression" is a lower value for "higher" metrics and
+#: vice versa.  Only deterministic (or machine-normalized) rows belong
+#: here — never raw microseconds.
+WATCHED: dict[str, list[tuple[str, str]]] = {
+    "planner": [
+        ("planner.a100.speedup", "higher"),
+        ("planner.h100.speedup", "higher"),
+    ],
+    "fleet": [
+        ("fleet.4xA100.energy_saving", "higher"),
+        ("fleet.4xA100.thpt_ratio", "higher"),
+        ("fleet.4xA100.energy_aware.energy_kj", "lower"),
+        ("fleet.2xA100+2xH100.energy_aware.energy_kj", "lower"),
+    ],
+    "serving": [
+        ("serving.a100.dynamic+pred.goodput_rps", "higher"),
+        ("serving.a100.dynamic+pred.energy_kj", "lower"),
+        ("serving.a100.dynamic+pred.p99_ttft_s", "lower"),
+        ("serving.h100.dynamic+pred.goodput_rps", "higher"),
+        ("serving.h100.dynamic+pred.energy_kj", "lower"),
+    ],
+    "cluster": [
+        ("cluster.follow_the_sun.dollar_saving", "higher"),
+        ("cluster.follow_the_sun.thpt_ratio", "higher"),
+        ("cluster.follow_the_sun.dollars", "lower"),
+        ("cluster.follow_the_sun.energy_kj", "lower"),
+    ],
+}
+
+
+def row_values(payload: dict) -> dict[str, float]:
+    """Fold a bench payload's rows into {name: value}.
+
+    A row's value is ``us_per_call`` when nonzero (timing-style rows also
+    reuse the slot for ratios, e.g. the planner speedup), else the leading
+    float of its ``derived`` string (simulation-style rows)."""
+    out: dict[str, float] = {}
+    for row in payload.get("rows", []):
+        us = row.get("us_per_call") or 0.0
+        if us:
+            out[row["name"]] = float(us)
+            continue
+        derived = str(row.get("derived", ""))
+        num = derived.split("/")[0].rstrip("x% ")
+        try:
+            out[row["name"]] = float(num)
+        except ValueError:
+            continue
+    return out
+
+
+def load(path: pathlib.Path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def check_schema(name: str, baseline: dict, fresh: dict) -> str | None:
+    """The fresh result carries the schema benchmarks/run.py writes today;
+    a baseline from any other schema (older layout, or missing the stamp
+    entirely) must be regenerated, not silently compared."""
+    base_v = baseline.get("schema_version")
+    fresh_v = fresh.get("schema_version")
+    if fresh_v is None:
+        return f"{name}: fresh result carries no schema_version stamp"
+    if base_v != fresh_v:
+        return (
+            f"{name}: baseline has schema_version={base_v!r} but this "
+            f"run writes {fresh_v!r} — regenerate the baseline with "
+            f"'python -m benchmarks.run' and recommit"
+        )
+    return None
+
+
+def compare_bench(
+    name: str,
+    baseline: dict,
+    fresh: dict,
+    max_regression: float,
+) -> tuple[list[str], list[str]]:
+    """Returns (report lines, failure lines) for one bench."""
+    lines: list[str] = []
+    failures: list[str] = []
+    base_rows = row_values(baseline)
+    fresh_rows = row_values(fresh)
+    for metric, direction in WATCHED.get(name, []):
+        if metric not in base_rows:
+            lines.append(f"  {metric:<45} (not in baseline, skipped)")
+            continue
+        if metric not in fresh_rows:
+            failures.append(f"{name}: metric {metric} missing from fresh run")
+            continue
+        base, now = base_rows[metric], fresh_rows[metric]
+        if abs(base) < 1e-12:
+            lines.append(f"  {metric:<45} baseline ~0, skipped")
+            continue
+        change = (now - base) / abs(base)
+        regression = -change if direction == "higher" else change
+        flag = "REGRESSION" if regression > max_regression else "ok"
+        lines.append(
+            f"  {metric:<45} {base:>12.4f} -> {now:>12.4f} "
+            f"({change:+.1%}, {direction} is better) {flag}"
+        )
+        if regression > max_regression:
+            failures.append(
+                f"{name}: {metric} regressed {regression:.1%} "
+                f"({base:.4f} -> {now:.4f}, {direction} is better)"
+            )
+    return lines, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline-dir",
+        default=".",
+        help="directory holding the committed BENCH_*.json baselines",
+    )
+    ap.add_argument(
+        "--results",
+        default="bench-results",
+        help="directory holding the freshly generated BENCH_*.json files",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="maximum tolerated relative regression (0.20 = 20%%)",
+    )
+    args = ap.parse_args()
+    baseline_dir = pathlib.Path(args.baseline_dir)
+    results_dir = pathlib.Path(args.results)
+
+    failures: list[str] = []
+    compared = 0
+    for fresh_path in sorted(results_dir.glob("BENCH_*.json")):
+        name = fresh_path.stem.removeprefix("BENCH_")
+        base_path = baseline_dir / fresh_path.name
+        if not base_path.exists():
+            print(f"{name}: no committed baseline at {base_path}, skipped")
+            continue
+        baseline = load(base_path)
+        fresh = load(fresh_path)
+        err = check_schema(name, baseline, fresh)
+        if err:
+            failures.append(err)
+            print(err)
+            continue
+        print(
+            f"{name}: baseline @{baseline.get('git_sha', '?')} vs "
+            f"fresh @{fresh.get('git_sha', '?')}"
+        )
+        lines, bench_failures = compare_bench(
+            name, baseline, fresh, args.max_regression
+        )
+        for line in lines:
+            print(line)
+        failures.extend(bench_failures)
+        compared += 1
+
+    if compared == 0 and not failures:
+        print("nothing to compare: no fresh results matched a baseline")
+        return 1
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
+        for failure in failures:
+            print(f"  {failure}", file=sys.stderr)
+        return 1
+    print(f"\nall watched metrics within {args.max_regression:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

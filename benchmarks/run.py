@@ -13,12 +13,17 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import subprocess
 import sys
 
-from benchmarks import (bench_breakdown, bench_fig4_general, bench_fig4_ml,
-                        bench_fleet, bench_kernels, bench_planner,
-                        bench_predictor, bench_reachability, bench_roofline,
-                        bench_serving, bench_tpu_pod)
+from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
+                        bench_fig4_ml, bench_fleet, bench_kernels,
+                        bench_planner, bench_predictor, bench_reachability,
+                        bench_roofline, bench_serving, bench_tpu_pod)
+
+#: Bump when the BENCH_<name>.json layout changes incompatibly;
+#: ``benchmarks/compare.py`` refuses baselines from another schema.
+SCHEMA_VERSION = 1
 
 BENCHES = {
     "fig4_general": bench_fig4_general.run,   # paper Fig. 4a-4d
@@ -32,13 +37,31 @@ BENCHES = {
     "tpu_pod": bench_tpu_pod.run,             # the TPU adaptation, end-to-end
     "fleet": bench_fleet.run,                 # multi-GPU fleet routing
     "serving": bench_serving.run,             # request-level LLM serving SLOs
+    "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
 }
 
 
+def git_sha() -> str:
+    """Short SHA of the working tree, or 'unknown' outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent)
+        if out.returncode == 0:
+            return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def _write_json(outdir: pathlib.Path, name: str,
-                rows: list[tuple[str, float, str]], extra) -> None:
+                rows: list[tuple[str, float, str]], extra,
+                sha: str) -> None:
     payload: dict = {
         "bench": name,
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": sha,
         "rows": [{"name": n, "us_per_call": us, "derived": derived}
                  for n, us, derived in rows],
     }
@@ -56,7 +79,10 @@ def main() -> None:
                     help="where BENCH_<name>.json files land")
     args = ap.parse_args()
     outdir = pathlib.Path(args.outdir)
+    # --outdir may name a directory that does not exist yet (CI passes
+    # bench-results/ on a fresh checkout) — create it before any write
     outdir.mkdir(parents=True, exist_ok=True)
+    sha = git_sha()
     rows: list[tuple[str, float, str]] = []
     failures = []
     for name, fn in BENCHES.items():
@@ -69,7 +95,7 @@ def main() -> None:
             failures.append((name, repr(e)))
             print(f"\n!! bench {name} failed: {e!r}")
             continue
-        _write_json(outdir, name, rows[rows_before:], extra)
+        _write_json(outdir, name, rows[rows_before:], extra, sha)
     print("\n=== CSV ===")
     print("name,us_per_call,derived")
     for name, us, derived in rows:

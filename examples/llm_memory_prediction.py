@@ -59,7 +59,7 @@ def main() -> None:
                            use_prediction=False)
     pred_m = run_scheme_a([qwen_job()], backend, A100_POWER,
                           use_prediction=True)
-    print(f"\nscheduler comparison (scheme A):")
+    print("\nscheduler comparison (scheme A):")
     print(f"  without prediction: makespan {no_pred.makespan:7.1f}s, "
           f"{no_pred.n_oom} OOM crash(es), wasted "
           f"{no_pred.wasted_seconds:.1f}s")

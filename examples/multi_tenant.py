@@ -28,7 +28,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.partition_manager import PartitionManager
 from repro.core.restart import NeedsLargerPartition
-from repro.core.tpu_slices import TpuPodBackend, shape_at_depth
+from repro.core.tpu_slices import TpuPodBackend
 from repro.launch.mesh import make_slice_mesh
 from repro.models import registry
 from repro.core.memory.accountant import MemoryAccountant, pytree_nbytes

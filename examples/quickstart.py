@@ -11,11 +11,9 @@ import argparse
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.models import registry
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.data import DataConfig, SyntheticLM

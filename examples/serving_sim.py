@@ -14,7 +14,8 @@ from repro.serving.sim import (ServingConfig, poisson_requests, run_serving)
 
 
 def main() -> None:
-    make_requests = lambda: poisson_requests(300, rate_per_s=2.0, seed=11)
+    def make_requests():
+        return poisson_requests(300, rate_per_s=2.0, seed=11)
 
     print("== one A100: policy comparison ==")
     for cfg in (ServingConfig(policy="full"),

@@ -1,0 +1,219 @@
+"""The cluster orchestrator: one event kernel over every zone's devices.
+
+The hierarchy reuses each layer below it wholesale — no fifth bespoke
+ladder:
+
+1. the cluster policy ranks *zones* with a planner cost model
+   (``energy_price`` / ``data_movement_s`` / ``load``),
+2. the chosen zone's own :class:`~repro.fleet.orchestrator.FleetPolicy`
+   ranks *devices* and commits through the partition planner
+   (``dispatch_job`` — the fleet accepting externally-routed work),
+3. the device's planner picks the *partition action* exactly as in the
+   single-GPU paper.
+
+Every device across every zone hangs off one
+:class:`~repro.core.scheduler.kernel.EventKernel`, so the global clock,
+per-zone tariff integration (joules -> dollars) and cross-zone moves are
+all well-defined on a single timeline.  A job that restarts in a different
+zone than its previous run is typed as a cluster-level
+:class:`~repro.core.planner.actions.Migrate` (zone + checkpoint transfer
+seconds) and counted once in ``ClusterMetrics.n_cross_zone_migrations`` —
+never also in the source fleet's ``n_migrations``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Mapping, Sequence
+
+from repro.cluster.policies import ZoneRouter
+from repro.cluster.zones import Zone, checkpoint_movement_s
+from repro.core.planner import Migrate
+from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
+from repro.core.scheduler.job import Job
+from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
+from repro.core.scheduler.metrics import ClusterMetrics, ZoneMetrics
+from repro.fleet.devices import WAKE_LATENCY_S
+from repro.fleet.energy import PricedEnergyIntegrator
+from repro.fleet.orchestrator import FleetPolicy, drain_queue, gate_idle_devices
+from repro.fleet.router import CostRouter
+
+
+class ClusterPolicy(SchedulingPolicy):
+    """Zone-router-driven dispatch over N fleets, as one kernel policy."""
+
+    online = True
+
+    def __init__(
+        self,
+        zones: Sequence[Zone],
+        router: ZoneRouter,
+        wake_latency_s: float = WAKE_LATENCY_S,
+        origin: Mapping[str, str] | None = None,
+    ) -> None:
+        names = [z.name for z in zones]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate zone names: {names}")
+        self.zones = list(zones)
+        self.router = router
+        self.name = router.name
+        self.origin = dict(origin or {})
+        self._fleets: dict[str, FleetPolicy] = {}
+        self._meters: dict[str, PricedEnergyIntegrator] = {}
+        for zone in self.zones:
+            self._fleets[zone.name] = FleetPolicy(zone.router, wake_latency_s)
+            self._meters[zone.name] = PricedEnergyIntegrator(
+                zone.devices, zone.tariff.price_at
+            )
+        self._last_zone: dict[str, str] = {}  # job name -> zone name
+        self.n_cross_zone_migrations = 0
+        self.data_movement_s_total = 0.0
+        self.migrations: list[str] = []
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _from_zone(self, job: Job) -> str | None:
+        return self._last_zone.get(job.name, self.origin.get(job.name))
+
+    def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
+        from_zone = self._from_zone(job)
+        ranked = self.router.rank(job, self.zones, kernel.t, from_zone)
+        for zone in ranked:
+            move_s = checkpoint_movement_s(
+                job, from_zone, zone.name, self.router.cross_zone_gbps
+            )
+            placed = self._fleets[zone.name].dispatch_job(
+                kernel, job, devices=zone.devices, extra_setup_s=move_s
+            )
+            if placed is None:
+                continue
+            dev, action = placed
+            prev = self._last_zone.get(job.name)
+            if prev is not None and prev != zone.name:
+                # a checkpointed restart landing in another zone: typed as
+                # a cluster-level Migrate, counted here exactly once — the
+                # source fleet forgets the job so its n_migrations never
+                # also counts this move
+                action = Migrate(
+                    device=dev.name,
+                    inner=action,
+                    zone=zone.name,
+                    data_movement_s=move_s,
+                )
+                self.n_cross_zone_migrations += 1
+                self._fleets[prev].forget(job.name)
+                self.migrations.append(action.describe())
+            self.data_movement_s_total += move_s
+            self._last_zone[job.name] = zone.name
+            return True
+        return False
+
+    def dispatch(self, kernel: EventKernel) -> bool:
+        for zone in self.zones:
+            if isinstance(zone.router, CostRouter):
+                zone.router.price_per_j = zone.tariff.price_at(kernel.t)
+        placed = drain_queue(kernel, functools.partial(self._dispatch_one, kernel))
+        for zone in self.zones:
+            if zone.router.consolidates:
+                gate_idle_devices(zone.devices)
+        for meter in self._meters.values():
+            meter.observe(kernel.t)
+        return placed
+
+    # -- events ------------------------------------------------------------
+
+    def on_finish(self, kernel: EventKernel, dev: DeviceSim, run) -> None:
+        if run.plan.outcome in (OOM, EARLY_RESTART):
+            run.job.est_mem_gb = run.plan.new_est_mem_gb
+            kernel.queue.insert(0, run.job)  # restart: earliest arrival
+
+    def on_stall(self, kernel: EventKernel) -> None:
+        if kernel.has_events():
+            return  # a future arrival (or reconfig) may unblock the queue
+        worst = kernel.queue[0]
+        raise RuntimeError(
+            f"deadlock: {worst.name} (est {worst.est_mem_gb}GB) fits no "
+            f"zone in [{', '.join(z.name for z in self.zones)}]"
+        )
+
+    # -- reporting ---------------------------------------------------------
+
+    def result(self, kernel: EventKernel, jobs: list) -> ClusterMetrics:
+        for meter in self._meters.values():
+            meter.observe(kernel.t)
+        arrival_of = {j.name: j.arrival for j in jobs}
+        completions: dict[str, float] = {}
+        per_zone = []
+        for zone in self.zones:
+            meter = self._meters[zone.name]
+            for dev in zone.devices:
+                completions.update(dev.finished)
+            per_zone.append(
+                ZoneMetrics(
+                    zone=zone.name,
+                    tariff=zone.tariff.name,
+                    energy_j=meter.joules,
+                    dollars=meter.dollars,
+                    gated_seconds=meter.gated_seconds,
+                    idle_joules_avoided=meter.idle_joules_avoided,
+                    n_finished=sum(len(d.finished) for d in zone.devices),
+                    n_migrations=self._fleets[zone.name].n_migrations,
+                    per_device=[d.metrics(len(d.finished)) for d in zone.devices],
+                )
+            )
+        jcts = [completions[name] - arrival_of[name] for name in completions]
+        devices = kernel.devices
+        return ClusterMetrics(
+            policy=self.router.name,
+            zones=", ".join(z.name for z in self.zones),
+            n_jobs=len(jobs),
+            makespan=max(kernel.t, 1e-9),
+            energy_j=sum(z.energy_j for z in per_zone),
+            dollars=sum(z.dollars for z in per_zone),
+            gated_seconds=sum(z.gated_seconds for z in per_zone),
+            mean_jct=sum(jcts) / max(len(jcts), 1),
+            n_oom=sum(d.n_oom for d in devices),
+            n_early_restarts=sum(d.n_early for d in devices),
+            n_reconfigs=sum(d.pm.n_reconfigs for d in devices),
+            n_migrations=sum(f.n_migrations for f in self._fleets.values()),
+            n_cross_zone_migrations=self.n_cross_zone_migrations,
+            data_movement_s=self.data_movement_s_total,
+            per_zone=per_zone,
+            migrations=self.migrations,
+        )
+
+
+class ClusterOrchestrator:
+    """Owns the zones; ``run`` is a thin kernel invocation with a
+    :class:`ClusterPolicy` over every zone's devices."""
+
+    def __init__(
+        self,
+        zones: Sequence[Zone],
+        router: ZoneRouter,
+        wake_latency_s: float = WAKE_LATENCY_S,
+    ) -> None:
+        self.zones = list(zones)
+        self.router = router
+        self.wake_latency_s = wake_latency_s
+
+    def run(
+        self, jobs: Iterable[Job], origin: Mapping[str, str] | None = None
+    ) -> ClusterMetrics:
+        policy = ClusterPolicy(
+            self.zones, self.router, self.wake_latency_s, origin=origin
+        )
+        devices = [d for z in self.zones for d in z.devices]
+        return EventKernel(devices, policy).run(jobs)
+
+
+def run_cluster(
+    zones: Sequence[Zone],
+    router: ZoneRouter,
+    jobs: Iterable[Job],
+    origin: Mapping[str, str] | None = None,
+    wake_latency_s: float = WAKE_LATENCY_S,
+) -> ClusterMetrics:
+    """One-shot convenience wrapper."""
+    orch = ClusterOrchestrator(zones, router, wake_latency_s=wake_latency_s)
+    return orch.run(jobs, origin=origin)

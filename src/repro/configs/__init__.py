@@ -1,5 +1,5 @@
 """Assigned-architecture configs (one module per arch, cited)."""
-from repro.configs.base import ModelConfig, reduce_for_smoke
+from repro.configs.base import ModelConfig
 
 ARCH_MODULES = {
     "gemma3-27b": "repro.configs.gemma3_27b",

@@ -17,7 +17,7 @@ instrumented allocator does.  Jobs (the serving engine, the train loop) call
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from typing import Any
 
 import jax
 import numpy as np

@@ -23,8 +23,7 @@ FP32 = 4
 
 def param_count(cfg: ModelConfig) -> int:
     """Total parameters (embedding + per-layer + head)."""
-    d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab
-    hd = cfg.resolved_head_dim
+    d, v = cfg.d_model, cfg.vocab
     emb = v * d * (1 if cfg.tie_embeddings else 2)
     per_layer = 0
     if cfg.family == "ssm":
@@ -55,7 +54,6 @@ def active_param_count(cfg: ModelConfig) -> int:
     MODEL_FLOPS = 6 * N_active * D in the roofline."""
     if not cfg.n_experts:
         return param_count(cfg)
-    d = cfg.d_model
     dense = param_count(cfg) - cfg.n_layers * cfg.n_experts * _mlp_params(cfg)
     return dense + cfg.n_layers * cfg.top_k * _mlp_params(cfg)
 

@@ -23,7 +23,6 @@ Convergence: the prediction is reported once it is stable within
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 

@@ -19,7 +19,7 @@ Two backends implement this interface:
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Iterable, Sequence
+from typing import Hashable, Sequence
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,7 +22,9 @@ from repro.core.planner.actions import (Action, FreshAllocate, Grow, Migrate,
                                         ReshapeFuseFission, ReuseIdle, Wait)
 from repro.core.planner.cost import (BEST_FIT_DEVICE_COST, CostModel,
                                      CostTerms, ENERGY_AWARE_DEVICE_COST,
-                                     SCHEME_B_COST, SERVING_GROW_COST,
+                                     FOLLOW_THE_SUN_ZONE_COST,
+                                     PRICE_GREEDY_ZONE_COST, SCHEME_B_COST,
+                                     SERVING_GROW_COST,
                                      normalized_reachability)
 from repro.core.planner.graph import (TransitionGraph,
                                       compile_transition_graph)
@@ -35,7 +37,8 @@ from repro.core.planner.planner import (Candidate, PartitionPlanner, Plan,
 
 __all__ = [
     "Action", "BEST_FIT_DEVICE_COST", "Candidate", "CostModel", "CostTerms",
-    "ENERGY_AWARE_DEVICE_COST", "FreshAllocate", "Grow", "Migrate",
+    "ENERGY_AWARE_DEVICE_COST", "FOLLOW_THE_SUN_ZONE_COST", "FreshAllocate",
+    "Grow", "Migrate", "PRICE_GREEDY_ZONE_COST",
     "PartitionPlanner", "Plan", "PlanRequest", "PlanResult",
     "ReshapeFuseFission", "ReuseIdle", "SCHEME_B_COST", "SERVING_GROW_COST",
     "TransitionGraph", "Wait", "compile_transition_graph", "grow_ladder",

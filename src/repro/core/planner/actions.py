@@ -89,13 +89,23 @@ class Grow(Action):
 @dataclasses.dataclass(frozen=True)
 class Migrate(Action):
     """Fleet level: a restarted job lands on a *different* device than its
-    previous run (the A100 job that outgrows 40GB restarting on an H100)."""
+    previous run (the A100 job that outgrows 40GB restarting on an H100).
+    Cluster level: ``zone`` names the destination fleet and
+    ``data_movement_s`` is the checkpoint transfer the move paid — the
+    hierarchical router types every cross-zone move as one of these."""
 
     device: str
     inner: Action
+    zone: str = ""
+    data_movement_s: float = 0.0
 
     def describe(self) -> str:
-        return f"migrate to {self.device}: {self.inner.describe()}"
+        dest = self.device
+        if self.zone and not dest.startswith(f"{self.zone}/"):
+            dest = f"{self.zone}/{dest}"
+        tail = (f" (+{self.data_movement_s:.1f}s checkpoint move)"
+                if self.data_movement_s else "")
+        return f"migrate to {dest}: {self.inner.describe()}{tail}"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,6 +40,8 @@ class CostTerms:
     idle_power_w: float = 0.0    # idle draw of the hosting device
     load: float = 0.0            # device load fraction (consolidation)
     free_after_gb: float = 0.0   # device memory left free after the action
+    energy_price: float = 0.0    # tariff-weighted idle draw, $/s at the zone
+    data_movement_s: float = 0.0 # cross-zone checkpoint/input transfer secs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +98,28 @@ ENERGY_AWARE_DEVICE_COST = CostModel("energy_aware", (
     ("wake_s", 1.0),
     ("load", -1.0),
     ("idle_power_w", 1.0),
+))
+
+#: Cluster zone ranking, price-greedy flavour: chase the *instantaneous*
+#: tariff (cheapest $/s of idle draw right now), then move the least data
+#: across zones, then pack the busiest zone.  Deliberately myopic — near a
+#: tariff crossover it ships work into a zone about to turn expensive,
+#: which is exactly the failure mode follow-the-sun's forecast avoids.
+PRICE_GREEDY_ZONE_COST = CostModel("price_greedy_zone", (
+    ("energy_price", 1.0),
+    ("data_movement_s", 1.0),
+    ("load", -1.0),
+))
+
+#: Cluster zone ranking, follow-the-sun flavour: same weights, but the
+#: ``energy_price`` feature is the tariff's *mean over the job's predicted
+#: run window* (shifted by the cross-zone transfer it would pay), so work
+#: flows to the zone whose night covers the job, not the zone that merely
+#: looks cheap this second (arXiv:2501.17752 lifted to routing).
+FOLLOW_THE_SUN_ZONE_COST = CostModel("follow_the_sun_zone", (
+    ("energy_price", 1.0),
+    ("data_movement_s", 1.0),
+    ("load", -1.0),
 ))
 
 

@@ -71,7 +71,8 @@ def grow_ladder(backend: PartitionBackend, current: PartitionProfile,
                   backend.profiles[-1].mem_gb)
     bigger = [p for p in backend.profiles
               if p.mem_gb > current.mem_gb and p.mem_gb >= need_gb]
-    rank = lambda p: (p.mem_gb, -p.compute_fraction)
+    def rank(p):
+        return (p.mem_gb, -p.compute_fraction)
     strong = sorted((p for p in bigger
                      if p.compute_fraction >= compute_demand), key=rank)
     weak = sorted((p for p in bigger

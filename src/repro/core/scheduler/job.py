@@ -9,7 +9,6 @@ simulator replays against the partition it runs on.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import numpy as np

@@ -1,10 +1,11 @@
 """Shared metrics for every simulation layer.
 
-One module holds the result records of all three simulation surfaces —
+One module holds the result records of every simulation surface —
 per-device batch metrics (:class:`Metrics`), fleet aggregates
-(:class:`FleetMetrics`) and the helpers the request-level serving layer
-builds its SLO metrics from — so a new policy or workload never grows its
-own bookkeeping variant.
+(:class:`FleetMetrics`), cluster-of-fleets aggregates
+(:class:`ClusterMetrics` over per-zone :class:`ZoneMetrics`) and the
+helpers the request-level serving layer builds its SLO metrics from — so a
+new policy or workload never grows its own bookkeeping variant.
 """
 
 from __future__ import annotations
@@ -95,6 +96,70 @@ class FleetMetrics:
                 f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
                 f"early={self.n_early_restarts} reconf={self.n_reconfigs} "
                 f"migr={self.n_migrations}")
+
+
+@dataclasses.dataclass
+class ZoneMetrics:
+    """One energy zone's share of a cluster run (a fleet + its tariff)."""
+
+    zone: str
+    tariff: str
+    energy_j: float
+    dollars: float             # tariff-integrated: sum over time of P * $/J
+    gated_seconds: float
+    idle_joules_avoided: float
+    n_finished: int
+    n_migrations: int          # intra-zone cross-device restarts only
+    per_device: list[Metrics]
+
+    def summary(self) -> str:
+        return (f"{self.zone} [{self.tariff}]: done={self.n_finished} "
+                f"energy={self.energy_j / 1e3:.1f}kJ "
+                f"cost=${self.dollars:.4f} gated={self.gated_seconds:.0f}s "
+                f"migr={self.n_migrations}")
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    """A cluster-of-fleets run: per-zone Joules and dollars plus the
+    cross-zone movement the hierarchical router paid for them."""
+
+    policy: str
+    zones: str
+    n_jobs: int
+    makespan: float
+    energy_j: float
+    dollars: float
+    gated_seconds: float
+    mean_jct: float
+    n_oom: int
+    n_early_restarts: int
+    n_reconfigs: int
+    n_migrations: int              # intra-zone (fleet-level Migrate)
+    n_cross_zone_migrations: int   # cluster-level Migrate, counted once
+    data_movement_s: float         # total checkpoint-transfer seconds paid
+    per_zone: list[ZoneMetrics]
+    migrations: list[str]          # describe() of each cluster-level Migrate
+
+    @property
+    def throughput(self) -> float:
+        return self.n_jobs / max(self.makespan, 1e-9)
+
+    @property
+    def dollars_per_job(self) -> float:
+        return self.dollars / max(self.n_jobs, 1)
+
+    def summary(self) -> str:
+        return (f"{self.policy} over [{self.zones}]: jobs={self.n_jobs} "
+                f"makespan={self.makespan:.1f}s "
+                f"thpt={self.throughput:.4f}/s "
+                f"energy={self.energy_j / 1e3:.1f}kJ "
+                f"cost=${self.dollars:.4f} "
+                f"(${1e3 * self.dollars_per_job:.2f}m/job) "
+                f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
+                f"migr={self.n_migrations} "
+                f"xzone={self.n_cross_zone_migrations} "
+                f"moved={self.data_movement_s:.1f}s")
 
 
 def percentile(values: Sequence[float], q: float) -> float:

@@ -104,8 +104,12 @@ class TpuPodBackend(PartitionBackend):
         self.max_depth = max_depth
         self.pod_shape = pod_shape
         self.chip_hbm_gb = chip_hbm_gb
-        sh = lambda d: shape_at_depth(d, pod_shape)
-        ch = lambda d: chips_at_depth(d, pod_shape)
+        def sh(d):
+            return shape_at_depth(d, pod_shape)
+
+        def ch(d):
+            return chips_at_depth(d, pod_shape)
+
         self.profiles = [
             PartitionProfile(
                 name="x".join(map(str, sh(d))),

@@ -15,16 +15,20 @@ from repro.fleet.arrivals import (diurnal_arrivals, jobs_from_trace,
                                   load_alibaba_csv, poisson_arrivals,
                                   synthetic_alibaba_rows)
 from repro.fleet.devices import make_device, make_fleet
-from repro.fleet.energy import FleetEnergyIntegrator
-from repro.fleet.orchestrator import FleetMetrics, FleetOrchestrator, run_fleet
+from repro.fleet.energy import (FleetCostSummary, FleetEnergyIntegrator,
+                                PricedEnergyIntegrator)
+from repro.fleet.orchestrator import (FleetMetrics, FleetOrchestrator,
+                                      FleetPolicy, run_fleet)
 from repro.fleet.router import (BestFitRouter, EnergyAwareRouter,
                                 RandomRouter, Router, RoundRobinRouter,
-                                make_router)
+                                device_cost_terms, make_router)
 
 __all__ = [
-    "BestFitRouter", "EnergyAwareRouter", "FleetEnergyIntegrator",
-    "FleetMetrics", "FleetOrchestrator", "RandomRouter", "Router",
-    "RoundRobinRouter", "diurnal_arrivals", "jobs_from_trace",
-    "load_alibaba_csv", "make_device", "make_fleet", "make_router",
-    "poisson_arrivals", "run_fleet", "synthetic_alibaba_rows",
+    "BestFitRouter", "EnergyAwareRouter", "FleetCostSummary",
+    "FleetEnergyIntegrator", "FleetMetrics", "FleetOrchestrator",
+    "FleetPolicy", "PricedEnergyIntegrator", "RandomRouter", "Router",
+    "RoundRobinRouter", "device_cost_terms", "diurnal_arrivals",
+    "jobs_from_trace", "load_alibaba_csv", "make_device", "make_fleet",
+    "make_router", "poisson_arrivals", "run_fleet",
+    "synthetic_alibaba_rows",
 ]

@@ -39,10 +39,12 @@ def poisson_arrivals(jobs: Sequence[Job], rate_per_s: float,
 
 def diurnal_arrivals(jobs: Sequence[Job], period_s: float,
                      peak_rate: float, trough_rate: float,
-                     seed: int = 0) -> list[Job]:
+                     seed: int = 0, phase_s: float = 0.0) -> list[Job]:
     """Non-homogeneous Poisson with a sinusoidal day/night rate, sampled by
     thinning: candidates at the peak rate, accepted with probability
-    lambda(t)/peak."""
+    lambda(t)/peak.  ``phase_s`` shifts the zone's local clock — a cluster
+    stamps each zone's arrivals with its own offset so the zones' "days"
+    interleave (follow-the-sun routing exploits exactly that stagger)."""
     if not 0.0 < trough_rate <= peak_rate:
         raise ValueError("need 0 < trough_rate <= peak_rate")
     rng = np.random.default_rng(seed)
@@ -50,9 +52,10 @@ def diurnal_arrivals(jobs: Sequence[Job], period_s: float,
     for job in jobs:
         while True:
             t += float(rng.exponential(1.0 / peak_rate))
-            # rate bottoms out at t=0 ("night"), peaks half a period later
+            # rate bottoms out at local t=0 ("night"), peaks half a period
+            # later; phase_s converts global sim time to zone-local time
             lam = trough_rate + (peak_rate - trough_rate) * 0.5 * (
-                1.0 - math.cos(2.0 * math.pi * t / period_s))
+                1.0 - math.cos(2.0 * math.pi * (t + phase_s) / period_s))
             if float(rng.uniform(0.0, peak_rate)) <= lam:
                 break
         job.arrival = t

@@ -22,7 +22,8 @@ totals (makespan, Joules) are well-defined.
 
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+import functools
+from typing import Callable, Iterable, Sequence
 
 from repro.core.planner import Migrate
 from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
@@ -32,6 +33,30 @@ from repro.core.scheduler.metrics import FleetMetrics
 from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import FleetEnergyIntegrator
 from repro.fleet.router import Router
+
+
+def drain_queue(kernel: EventKernel,
+                try_dispatch: Callable[[Job], bool]) -> bool:
+    """FIFO-with-backfill drain of the kernel's admission queue: try every
+    queued job (an unplaceable head must not starve jobs behind it) and
+    drop the placed ones.  Filter by identity: Job is a value-equality
+    dataclass, so ``list.remove`` could drop an equal-but-different job.
+    Shared by the fleet and cluster policies."""
+    placed: set[int] = set()
+    for job in kernel.queue:
+        if try_dispatch(job):
+            placed.add(id(job))
+    if placed:
+        kernel.queue[:] = [j for j in kernel.queue
+                           if id(j) not in placed]
+    return bool(placed)
+
+
+def gate_idle_devices(devices: Sequence[DeviceSim]) -> None:
+    """Consolidation step: power-gate every device left fully idle."""
+    for dev in devices:
+        if not dev.gated and not dev.has_running:
+            dev.gate()
 
 
 class FleetPolicy(SchedulingPolicy):
@@ -50,8 +75,19 @@ class FleetPolicy(SchedulingPolicy):
 
     # -- dispatch ----------------------------------------------------------
 
-    def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
-        for dev in self.router.rank(job, kernel.devices):
+    def dispatch_job(self, kernel: EventKernel, job: Job,
+                     devices: Sequence[DeviceSim] | None = None,
+                     extra_setup_s: float = 0.0):
+        """Route one job over ``devices`` (default: every kernel device) and
+        commit to the first whose placement ladder succeeds.
+
+        This is the entry point for an *external* router — the cluster
+        layer hands each fleet jobs restricted to that fleet's devices,
+        with ``extra_setup_s`` carrying the cross-zone data-movement cost.
+        Returns ``(device, committed action)`` or ``None``.
+        """
+        pool = kernel.devices if devices is None else devices
+        for dev in self.router.rank(job, pool):
             result = dev.planner.execute(dev.plan_place(job))
             if result is None:
                 continue
@@ -63,29 +99,29 @@ class FleetPolicy(SchedulingPolicy):
                 action = Migrate(device=dev.name, inner=action)
                 self.n_migrations += 1
             self._last_device[job.name] = dev.name
-            setup = result.setup_s
+            setup = result.setup_s + extra_setup_s
             if dev.gated:
                 dev.ungate()
                 setup += self.wake_latency_s
             kernel.start(dev, job, result.partition, setup_s=setup)
-            return True
-        return False
+            return dev, action
+        return None
+
+    def forget(self, job_name: str) -> None:
+        """Drop the job's placement history — it moved to another fleet, so
+        a later return must not double-count as an intra-fleet migration
+        (the cluster layer counts the cross-zone move instead)."""
+        self._last_device.pop(job_name, None)
+
+    def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
+        return self.dispatch_job(kernel, job) is not None
 
     def dispatch(self, kernel: EventKernel) -> bool:
-        placed: set[int] = set()
-        for job in kernel.queue:
-            if self._dispatch_one(kernel, job):
-                # filter by identity: Job is a value-equality dataclass, so
-                # list.remove could drop an equal-but-different job
-                placed.add(id(job))
-        if placed:
-            kernel.queue[:] = [j for j in kernel.queue
-                               if id(j) not in placed]
+        placed = drain_queue(kernel,
+                             functools.partial(self._dispatch_one, kernel))
         if self.router.consolidates:
-            for dev in kernel.devices:
-                if not dev.gated and not dev.has_running:
-                    dev.gate()
-        return bool(placed)
+            gate_idle_devices(kernel.devices)
+        return placed
 
     # -- events ------------------------------------------------------------
 

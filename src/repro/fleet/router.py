@@ -75,8 +75,16 @@ class RandomRouter(Router):
 
 
 def device_cost_terms(job: Job, dev: DeviceSim,
-                      wake_s: float = WAKE_LATENCY_S) -> CostTerms:
-    """The planner cost features of routing ``job`` to ``dev``."""
+                      wake_s: float = WAKE_LATENCY_S,
+                      price_per_j: float = 0.0) -> CostTerms:
+    """The planner cost features of routing ``job`` to ``dev``.
+
+    ``price_per_j`` ($/J, the hosting zone's current tariff) feeds the
+    ``energy_price`` feature — the dollars per second this device's idle
+    floor burns — so a cost model can prefer the device generation that is
+    cheap to keep awake *here and now* (an A100's 55W beats an H100's 75W
+    when the local tariff is at its peak).
+    """
     est = job.est_mem_gb if job.est_mem_gb is not None else 0.0
     prof = (dev.backend.tightest_profile(est, job.compute_demand)
             or dev.backend.profiles[-1])
@@ -88,20 +96,30 @@ def device_cost_terms(job: Job, dev: DeviceSim,
                                            reach=dev.pm.reach(dev.pm.state)),
         compute_deficit=max(0.0, job.compute_demand - prof.compute_fraction),
         load=dev.load_fraction(),
-        idle_power_w=dev.energy.model.p_idle_w)
+        idle_power_w=dev.energy.model.p_idle_w,
+        energy_price=price_per_j * dev.energy.model.p_idle_w)
 
 
 class CostRouter(Router):
     """A router that is purely a cost model over device features: rank is
-    a stable sort by the weighted lexicographic cost vector."""
+    a stable sort by the weighted lexicographic cost vector.
+
+    ``price_per_j`` is the hosting zone's tariff at the decision instant;
+    the cluster policy refreshes it before each dispatch round so models
+    that weight ``energy_price`` stay tariff-aware.  It defaults to 0.0 and
+    no built-in device model weights the feature, so standalone fleet
+    behaviour is unchanged.
+    """
 
     cost_model: CostModel
+    price_per_j: float = 0.0
 
     def rank(self, job: Job, devices: Sequence[DeviceSim]
              ) -> list[DeviceSim]:
         return sorted(self.feasible(job, devices),
                       key=lambda d: self.cost_model.cost(
-                          device_cost_terms(job, d)))
+                          device_cost_terms(job, d,
+                                            price_per_j=self.price_per_j)))
 
 
 class BestFitRouter(CostRouter):

@@ -58,7 +58,6 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
             # match the op name as the instruction, not inside metadata
             if re.search(rf"=\s*[\w\[\]{{}},\s()]*\b{coll}", stripped) or \
                re.search(rf"\b{coll}-(start|done)\(", stripped):
-                lhs = stripped.split("=")[0] if "=" in stripped else ""
                 # result type appears right after '='
                 rhs = stripped.split("=", 1)[1] if "=" in stripped else stripped
                 head = rhs.split(coll)[0]

@@ -16,7 +16,6 @@ import argparse
 import dataclasses
 import json
 import time
-import traceback
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +31,7 @@ from repro.launch.hlo_parse import analyze as analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, ShapePreset, applicable, input_specs
 from repro.models import registry
-from repro.sharding.partitioning import (ACT_RULES, LONG_CONTEXT_OVERRIDES,
-                                         PARAM_RULES, POLICIES,
+from repro.sharding.partitioning import (LONG_CONTEXT_OVERRIDES,
                                          active_act_rules, apply_policy,
                                          spec_for)
 from repro.training.optimizer import AdamWConfig
@@ -119,7 +117,8 @@ def lower_prefill(cfg: ModelConfig, preset: ShapePreset, mesh,
     b_specs = registry.batch_specs(cfg, with_labels=False)
     b_sh = _shard_tree(batch_shapes, b_specs, mesh, arules,
                        preset.long_context)
-    fn = lambda p, b: registry.prefill(p, cfg, b)
+    def fn(p, b):
+        return registry.prefill(p, cfg, b)
     jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
     with active_act_rules(arules):
         return jitted.lower(param_shapes, batch_shapes)
@@ -140,7 +139,8 @@ def lower_decode(cfg: ModelConfig, preset: ShapePreset, mesh,
         LONG_CONTEXT_OVERRIDES if preset.long_context else None))
     idx = jax.ShapeDtypeStruct((), jnp.int32)
 
-    fn = lambda p, t, i, c: registry.decode_step(p, cfg, t, i, c)
+    def fn(p, t, i, c):
+        return registry.decode_step(p, cfg, t, i, c)
     jitted = jax.jit(fn,
                      in_shardings=(p_sh, tok_sh, _replicated(mesh), c_sh),
                      out_shardings=(None, c_sh), donate_argnums=(3,))
@@ -238,7 +238,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
         # analytic useful FLOPs (per device): 6*N*D for train (fwd+bwd),
         # 2*N*D for prefill, 2*N per token for decode
         from repro.core.memory.static_estimator import (
-            activation_bytes_train, estimate_serve, kv_cache_bytes)
+            activation_bytes_train, kv_cache_bytes)
         n_active = active_param_count(cfg)
         n_total = param_count(cfg)
         tokens = preset.batch * (preset.seq if preset.kind != "decode" else 1)

@@ -19,10 +19,8 @@ from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (embed_tokens, init_embedding, init_mlp,
-                                 init_rmsnorm, mlp, padded_vocab, rmsnorm,
-                                 unembed)
+                                 init_rmsnorm, mlp, rmsnorm, unembed)
 from repro.models.module import ParamBuilder
-from repro.sharding.partitioning import constrain
 
 GLOBAL = attn.GLOBAL_WINDOW
 

@@ -12,7 +12,6 @@ multi-tenant launcher migrates the job to a bigger sub-slice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

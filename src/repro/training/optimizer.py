@@ -8,7 +8,7 @@ optimizer state — the ZeRO layout the dry-run memory analysis assumes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,8 @@ def init_opt_state(params: Any, moments_dtype=jnp.float32) -> dict:
     """``moments_dtype=bf16`` halves optimizer memory — used for the
     >=300B dry-run configs where fp32 moments alone would exceed a v5e
     pod's HBM (documented in EXPERIMENTS.md §Dry-run)."""
-    zeros = lambda p: jnp.zeros(p.shape, moments_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moments_dtype)
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

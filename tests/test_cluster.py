@@ -1,0 +1,267 @@
+"""Tests for the cluster-of-fleets layer: tariffs, zone routing, dollars
+accounting, cross-zone migration counting, and seeded determinism."""
+
+import math
+
+import pytest
+
+from repro.cluster import (CROSS_ZONE_GBPS, CROSS_ZONE_SETUP_S, ZoneTariff,
+                           checkpoint_movement_s, cluster_workload, make_zone,
+                           make_zone_router, run_cluster, zone_cost_terms)
+from repro.core.scheduler.job import Job, rodinia_job
+
+
+def _tou(trough=0.05, peak=0.25, period=200.0):
+    return ZoneTariff("tou", trough, peak, period_s=period)
+
+
+def _three_zones(period=200.0, shape=("a100", "h100")):
+    tariff = _tou(period=period)
+    return [
+        make_zone("us", list(shape), tariff, phase_s=0.0),
+        make_zone("eu", list(shape), tariff, phase_s=period / 3),
+        make_zone("ap", list(shape), tariff, phase_s=2 * period / 3),
+    ]
+
+
+class TestZoneTariff:
+    def test_trough_at_local_midnight_peak_at_noon(self):
+        t = _tou(period=100.0)
+        per_j = 1.0 / 3.6e6
+        assert t.price_at(0.0) == pytest.approx(0.05 * per_j)
+        assert t.price_at(50.0) == pytest.approx(0.25 * per_j)
+
+    def test_phase_shifts_the_curve(self):
+        base = _tou(period=100.0)
+        shifted = ZoneTariff("tou", 0.05, 0.25, period_s=100.0, phase_s=30.0)
+        for t in (0.0, 12.5, 40.0, 99.0):
+            assert shifted.price_at(t) == pytest.approx(base.price_at(t + 30.0))
+
+    def test_mean_over_full_period_is_midpoint(self):
+        t = _tou(period=100.0)
+        mid = 0.5 * (0.05 + 0.25) / 3.6e6
+        assert t.mean_price(0.0, 100.0) == pytest.approx(mid)
+        # and over a half period centred on noon, strictly above midpoint
+        assert t.mean_price(25.0, 75.0) > mid
+
+    def test_mean_degenerates_to_instant(self):
+        t = _tou()
+        assert t.mean_price(40.0, 40.0) == pytest.approx(t.price_at(40.0))
+
+    def test_flat_tariff_is_constant(self):
+        f = ZoneTariff.flat(0.10)
+        assert f.price_at(0.0) == pytest.approx(f.price_at(1234.5))
+        assert f.mean_price(0.0, 500.0) == pytest.approx(f.price_at(0.0))
+
+    def test_invalid_tariff_rejected(self):
+        with pytest.raises(ValueError):
+            ZoneTariff("bad", 0.3, 0.1)
+        with pytest.raises(ValueError):
+            ZoneTariff("bad", 0.0, 0.1)
+
+
+class TestZones:
+    def test_make_zone_prefixes_devices_and_phases_tariff(self):
+        z = make_zone("eu", ["a100", "a100", "h100"], _tou(), phase_s=50.0)
+        assert [d.name for d in z.devices] == \
+            ["eu/a100-0", "eu/a100-1", "eu/h100-0"]
+        assert z.tariff.phase_s == 50.0
+        assert z.tariff.price_at(0.0) == pytest.approx(
+            _tou().price_at(50.0))
+
+    def test_checkpoint_movement_proportional_to_estimate(self):
+        job = Job(name="j", mem_gb=20.0, t_kernel=1.0, est_mem_gb=20.0)
+        assert checkpoint_movement_s(job, None, "eu") == 0.0
+        assert checkpoint_movement_s(job, "eu", "eu") == 0.0
+        move = checkpoint_movement_s(job, "us", "eu")
+        assert move == pytest.approx(CROSS_ZONE_SETUP_S
+                                     + 20.0 / CROSS_ZONE_GBPS)
+
+    def test_zone_cost_terms_vocabulary(self):
+        z = make_zone("us", ["a100"], ZoneTariff.flat(0.10))
+        job = rodinia_job("gaussian")
+        terms = zone_cost_terms(job, z, t=0.0, from_zone="eu")
+        assert terms.energy_price == pytest.approx(
+            (0.10 / 3.6e6) * 55.0)          # tariff-weighted idle wattage
+        assert terms.data_movement_s > 0.0  # origin data lives elsewhere
+        assert terms.load == 0.0
+
+
+class TestZoneRouting:
+    def test_single_zone_routes_home_even_when_pricier(self):
+        zones = [
+            make_zone("us", ["a100"], ZoneTariff.flat(0.50)),
+            make_zone("eu", ["a100"], ZoneTariff.flat(0.01)),
+        ]
+        router = make_zone_router("single_zone")
+        ranked = router.rank(rodinia_job("gaussian"), zones, t=0.0)
+        assert [z.name for z in ranked] == ["us"]
+
+    def test_single_zone_escapes_only_on_infeasibility(self):
+        zones = [
+            make_zone("us", ["a100"], ZoneTariff.flat(0.10)),
+            make_zone("eu", ["h100"], ZoneTariff.flat(0.10)),
+        ]
+        router = make_zone_router("single_zone")
+        whale = Job(name="w", mem_gb=60.0, t_kernel=1.0, est_mem_gb=60.0)
+        assert [z.name for z in router.rank(whale, zones, t=0.0)] == ["eu"]
+
+    def test_price_greedy_picks_cheapest_now(self):
+        period = 100.0
+        zones = [
+            make_zone("noon", ["a100"], _tou(period=period),
+                      phase_s=period / 2),
+            make_zone("night", ["a100"], _tou(period=period), phase_s=0.0),
+        ]
+        router = make_zone_router("price_greedy")
+        ranked = router.rank(rodinia_job("gaussian"), zones, t=0.0)
+        assert ranked[0].name == "night"
+
+    def test_data_movement_breaks_price_ties(self):
+        flat = ZoneTariff.flat(0.10)
+        zones = [make_zone("us", ["a100"], flat),
+                 make_zone("eu", ["a100"], flat)]
+        router = make_zone_router("follow_the_sun")
+        job = rodinia_job("euler3d")
+        ranked = router.rank(job, zones, t=0.0, from_zone="eu")
+        assert ranked[0].name == "eu"   # stay where the data lives
+
+    def test_follow_the_sun_forecasts_over_the_run_window(self):
+        """A long job straddling a price crossover: the zone that is
+        marginally cheaper *now* turns expensive mid-run, so the forecast
+        prefers the zone whose night is coming."""
+        period = 100.0
+        # "waning": just past its trough, price rising for the next 50s;
+        # "waxing": just before its trough, price falling
+        waning = make_zone("waning", ["a100"], _tou(period=period),
+                           phase_s=2.0)
+        waxing = make_zone("waxing", ["a100"], _tou(period=period),
+                           phase_s=-18.0)
+        long_job = Job(name="long", mem_gb=4.0, t_kernel=30.0,
+                       est_mem_gb=4.0, t_fixed=0.0)
+        assert waning.tariff.price_at(0.0) < waxing.tariff.price_at(0.0)
+        greedy = make_zone_router("price_greedy")
+        fts = make_zone_router("follow_the_sun")
+        assert greedy.rank(long_job, [waning, waxing], 0.0)[0] is waning
+        assert fts.rank(long_job, [waning, waxing], 0.0)[0] is waxing
+
+    def test_unknown_router_rejected(self):
+        with pytest.raises(ValueError, match="unknown zone router"):
+            make_zone_router("teleport")
+
+
+class TestClusterEndToEnd:
+    def _run(self, policy, seed=3):
+        # arrivals span a full tariff period, so the home zone's day-night
+        # price swing is actually exercised (mean rate ~0.07/s/zone)
+        zones = _three_zones(period=300.0)
+        jobs, origin = cluster_workload(zones, 20, period_s=300.0,
+                                        peak_rate=0.12, trough_rate=0.02,
+                                        seed=seed)
+        return run_cluster(zones, make_zone_router(policy), jobs,
+                           origin=origin)
+
+    def test_seeded_determinism_identical_metrics(self):
+        """Same seed -> bit-identical ClusterMetrics, full dataclass
+        equality (per-zone dollars, per-device records, everything)."""
+        m1 = self._run("follow_the_sun")
+        m2 = self._run("follow_the_sun")
+        assert m1 == m2
+        m3 = self._run("follow_the_sun", seed=4)
+        assert m3 != m1
+
+    def test_all_jobs_finish_and_dollars_accrue(self):
+        m = self._run("price_greedy")
+        assert m.n_jobs == 60
+        assert sum(z.n_finished for z in m.per_zone) == 60
+        assert m.energy_j > 0.0
+        assert m.dollars > 0.0
+        assert m.makespan > 0.0
+        # dollars are bounded by the peak tariff applied to every joule
+        assert m.dollars <= m.energy_j * (0.25 / 3.6e6) * (1 + 1e-9)
+        assert m.dollars >= m.energy_j * (0.05 / 3.6e6) * (1 - 1e-9)
+
+    def test_cross_zone_migration_counted_exactly_once(self):
+        """An OOM restart that lands in another zone: counted once in
+        ClusterMetrics.n_cross_zone_migrations, never in the source
+        fleet's n_migrations."""
+        zones = [
+            make_zone("cheap", ["a100"], ZoneTariff.flat(0.05)),
+            make_zone("dear", ["h100"], ZoneTariff.flat(0.25)),
+        ]
+        # under-estimated whale: places on the cheap A100 (price-greedy),
+        # OOMs at 60GB real usage, can only restart on the dear H100
+        whale = Job(name="whale", mem_gb=60.0, t_kernel=3.0,
+                    compute_demand=0.8, est_mem_gb=30.0)
+        m = run_cluster(zones, make_zone_router("price_greedy"), [whale],
+                        origin={"whale": "cheap"})
+        assert m.n_cross_zone_migrations == 1
+        assert m.n_migrations == 0               # no intra-zone restarts
+        assert all(z.n_migrations == 0 for z in m.per_zone)
+        assert m.n_oom == 1
+        dear = next(z for z in m.per_zone if z.zone == "dear")
+        assert dear.n_finished == 1
+        assert len(m.migrations) == 1
+        assert "migrate to dear/" in m.migrations[0]
+        # the move shipped the 60GB re-estimated checkpoint
+        assert m.data_movement_s == pytest.approx(
+            CROSS_ZONE_SETUP_S + 60.0 / CROSS_ZONE_GBPS)
+
+    def test_origin_staging_is_not_a_migration(self):
+        """First placement away from the origin zone pays data movement
+        but is not a cross-zone migration (nothing restarted)."""
+        zones = [
+            make_zone("home", ["a100"], ZoneTariff.flat(0.25)),
+            make_zone("away", ["a100"], ZoneTariff.flat(0.05)),
+        ]
+        job = rodinia_job("gaussian")
+        m = run_cluster(zones, make_zone_router("price_greedy"), [job],
+                        origin={job.name: "home"})
+        away = next(z for z in m.per_zone if z.zone == "away")
+        assert away.n_finished == 1              # price won over locality
+        assert m.n_cross_zone_migrations == 0
+        assert m.data_movement_s > 0.0
+
+    def test_follow_the_sun_saves_dollars_vs_single_zone(self):
+        """The bench_cluster acceptance property in miniature."""
+        base = self._run("single_zone")
+        fts = self._run("follow_the_sun")
+        assert fts.dollars < base.dollars
+        assert fts.throughput >= 0.99 * base.throughput
+
+    def test_duplicate_zone_names_rejected(self):
+        zones = [make_zone("z", ["a100"], ZoneTariff.flat(0.1)),
+                 make_zone("z", ["a100"], ZoneTariff.flat(0.1))]
+        with pytest.raises(ValueError, match="duplicate zone names"):
+            run_cluster(zones, make_zone_router("single_zone"), [])
+
+    def test_infeasible_job_deadlocks_loudly(self):
+        zones = [make_zone("us", ["a100"], ZoneTariff.flat(0.1))]
+        leviathan = Job(name="lev", mem_gb=500.0, t_kernel=1.0,
+                        est_mem_gb=500.0)
+        with pytest.raises(RuntimeError, match="fits no zone"):
+            run_cluster(zones, make_zone_router("single_zone"), [leviathan])
+
+
+class TestPricedEnergy:
+    def test_constant_price_dollars_equal_joules_times_price(self):
+        zones = [make_zone("us", ["a100"], ZoneTariff.flat(0.36))]
+        job = rodinia_job("gaussian")
+        m = run_cluster(zones, make_zone_router("single_zone"), [job])
+        # 0.36 $/kWh = 1e-7 $/J exactly
+        assert m.dollars == pytest.approx(m.energy_j * 1e-7, rel=1e-9)
+
+    def test_diurnal_phase_clusters_arrivals_per_zone(self):
+        # enough jobs to span ~2 local days, so the mass concentrates on
+        # each zone's own noons rather than the pre-noon ramp
+        zones = _three_zones(period=100.0)
+        jobs, origin = cluster_workload(zones, 200, period_s=100.0,
+                                        peak_rate=2.0, trough_rate=0.1,
+                                        seed=5)
+        assert len(jobs) == 600 and len(origin) == 600
+        # each zone's arrival mass sits at its own local noon
+        for zone in zones:
+            mine = [j.arrival for j in jobs if origin[j.name] == zone.name]
+            phases = [math.cos(2 * math.pi * (t + zone.phase_s) / 100.0)
+                      for t in mine]
+            assert sum(phases) / len(phases) < -0.2

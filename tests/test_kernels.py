@@ -21,7 +21,8 @@ def _mk_qkv(key, b, s, h, kh, d, dtype):
 
 
 def _ref_bshd(q, k, v, **kw):
-    t = lambda x: x.transpose(0, 2, 1, 3)
+    def t(x):
+        return x.transpose(0, 2, 1, 3)
     return t(attention_ref(t(q), t(k), t(v), **kw))
 
 

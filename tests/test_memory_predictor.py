@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.memory.timeseries import (PeakMemoryPredictor, Prediction,
-                                          run_to_convergence, Z_99)
+from repro.core.memory.timeseries import (PeakMemoryPredictor,
+                                          run_to_convergence)
 from repro.core.memory.accountant import MemoryAccountant, pytree_nbytes
 from repro.core.memory.workspace import parse_cublas_workspace_config
 from repro.core.scheduler.job import (GB, llm_growth_trajectory,

@@ -2,8 +2,6 @@
 transition graph, the cost model, plan search/execution, and the planner's
 exact equivalence with the pre-planner placement ladder."""
 
-import dataclasses
-
 import pytest
 from hypothesis import given, settings, strategies as st
 

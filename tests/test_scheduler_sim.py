@@ -137,7 +137,8 @@ class TestPolicies:
         base = run_baseline([rodinia_job(names[(seed + i) % 3], i)
                              for i in range(n_jobs)], a100, A100_POWER)
         a = run_scheme_a(jobs, a100, A100_POWER, use_prediction=False)
-        dyn = lambda m: m.energy_j - A100_POWER.p_idle_w * m.makespan
+        def dyn(m):
+            return m.energy_j - A100_POWER.p_idle_w * m.makespan
         assert dyn(a) == pytest.approx(dyn(base), rel=0.05, abs=50.0)
         # and on batches large enough to fill the 7-way small group,
         # concurrency must win despite per-job stretch

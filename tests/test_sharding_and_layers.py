@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import get_smoke_config
 from repro.models import registry
 from repro.models.layers import cross_entropy_loss, embed_tokens
-from repro.models.module import ParamBuilder, cast_tree
+from repro.models.module import cast_tree
 from repro.sharding.partitioning import (ACT_RULES, PARAM_RULES, POLICIES,
                                          apply_policy, spec_for)
 

@@ -140,8 +140,9 @@ class TestServeEngine:
         eng = ServeEngine(cfg, params, EngineConfig(max_batch=2,
                                                     max_context=64,
                                                     predict=False))
-        reqs = lambda: [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
-                                max_new_tokens=8) for i in range(2)]
+        def reqs():
+            return [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=8) for i in range(2)]
         eng.run(reqs())
         first = [s.requested_bytes for s in eng.accountant.history]
         n_first = len(first)
