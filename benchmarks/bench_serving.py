@@ -28,11 +28,18 @@ ARRIVAL_RATE = 2.0      # req/s — ~80% of the full-device token capacity
 SEED = 11
 
 DEVICES = ["a100", "h100"]
+#: the dynamic arms pin the queue-tick growth gauge: this bench compares
+#: *mechanisms* (monolith / static / fission-fusion / + prediction) under
+#: the original reactive trigger, and its committed baseline pins those
+#: numbers; the SLO-aware growth discipline has its own head-to-head in
+#: ``bench_slo.py``.
 CONFIGS = [
     ServingConfig(policy="full"),
     ServingConfig(policy="static", n_engines=2),
-    ServingConfig(policy="dynamic", n_engines=2, use_prediction=False),
-    ServingConfig(policy="dynamic", n_engines=2, use_prediction=True),
+    ServingConfig(policy="dynamic", n_engines=2, use_prediction=False,
+                  gauge="queue_ticks"),
+    ServingConfig(policy="dynamic", n_engines=2, use_prediction=True,
+                  gauge="queue_ticks"),
 ]
 
 

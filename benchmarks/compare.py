@@ -53,6 +53,14 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
         ("cluster.follow_the_sun.dollars", "lower"),
         ("cluster.follow_the_sun.energy_kj", "lower"),
     ],
+    "slo": [
+        ("slo.a100.slo.p99_ttft_s", "lower"),
+        ("slo.a100.slo.energy_kj", "lower"),
+        ("slo.a100.slo.goodput_rps", "higher"),
+        ("slo.h100.slo.p99_ttft_s", "lower"),
+        ("slo.h100.slo.energy_kj", "lower"),
+        ("slo.h100.slo.goodput_rps", "higher"),
+    ],
 }
 
 

@@ -19,7 +19,8 @@ import sys
 from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
                         bench_fig4_ml, bench_fleet, bench_kernels,
                         bench_planner, bench_predictor, bench_reachability,
-                        bench_roofline, bench_serving, bench_tpu_pod)
+                        bench_roofline, bench_serving, bench_slo,
+                        bench_tpu_pod)
 
 #: Bump when the BENCH_<name>.json layout changes incompatibly;
 #: ``benchmarks/compare.py`` refuses baselines from another schema.
@@ -37,6 +38,7 @@ BENCHES = {
     "tpu_pod": bench_tpu_pod.run,             # the TPU adaptation, end-to-end
     "fleet": bench_fleet.run,                 # multi-GPU fleet routing
     "serving": bench_serving.run,             # request-level LLM serving SLOs
+    "slo": bench_slo.run,                     # SLO-aware vs reactive growth
     "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
 }
 

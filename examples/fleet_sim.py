@@ -12,14 +12,18 @@ scale, step by step:
   3. route with energy-aware consolidation: load packs onto the fewest
      devices and fully idle devices are power-gated to their residual
      floor;
-  4. compare against round-robin to see where the Joules went.
+  4. compare against round-robin to see where the Joules went;
+  5. re-run the burst behind graph-backed admission control — jobs whose
+     placement would collapse the FSM's reachability below what the
+     arrival forecast needs are queued (never dropped) until capacity or
+     the forecast relents.
 
     PYTHONPATH=src python examples/fleet_sim.py
 """
 
 from repro.core.scheduler.job import Job, rodinia_job
-from repro.fleet import (jobs_from_trace, make_fleet, make_router,
-                         poisson_arrivals, run_fleet,
+from repro.fleet import (AdmissionController, jobs_from_trace, make_fleet,
+                         make_router, poisson_arrivals, run_fleet,
                          synthetic_alibaba_rows)
 
 
@@ -56,6 +60,15 @@ def main() -> None:
             print(f"  idle-floor energy gated away: "
                   f"{metrics.idle_joules_avoided / 1e3:.1f}kJ "
                   f"over {metrics.gated_seconds:.0f} gated device-seconds")
+
+    print("\n== best_fit + graph-backed admission control ==")
+    fleet = make_fleet(["a100", "a100", "h100"])
+    metrics = run_fleet(fleet, make_router("best_fit"), build_workload(),
+                        admission=AdmissionController(horizon_s=20.0))
+    print(metrics.summary())
+    print(f"  {metrics.n_admission_deferrals} jobs deferred by the "
+          f"reachability floor, {metrics.n_admission_overrides} "
+          f"stall-escape overrides")
 
 
 if __name__ == "__main__":

@@ -4,8 +4,10 @@
 
 Simulates Poisson LLM request traffic into continuous-batching engines on
 MIG partitions and compares the serving policies: one monolithic engine
-(`full`), fixed slices (`static`), and grow-on-demand slices with and
-without the paper's peak-memory predictor (`dynamic` / `dynamic+pred`).
+(`full`), fixed slices (`static`), and grow-on-demand slices — reactively
+(the legacy `gauge="queue_ticks"` threshold) or SLO-aware (the default
+`gauge="slo"`: growth happens when the forecast p99-miss probability
+outweighs the reconfiguration, sized to the predictor's KV trajectory).
 Reports serving SLO metrics — TTFT, TPOT, p99 latency, goodput — plus the
 energy integral.
 """
@@ -15,15 +17,15 @@ from repro.serving.sim import (ServingConfig, poisson_requests, run_serving)
 
 def main() -> None:
     def make_requests():
-        return poisson_requests(300, rate_per_s=2.0, seed=11)
+        return poisson_requests(300, rate_per_s=2.5, seed=11)
 
     print("== one A100: policy comparison ==")
     for cfg in (ServingConfig(policy="full"),
                 ServingConfig(policy="static", n_engines=2),
                 ServingConfig(policy="dynamic", n_engines=2,
-                              use_prediction=False),
+                              use_prediction=False, gauge="queue_ticks"),
                 ServingConfig(policy="dynamic", n_engines=2,
-                              use_prediction=True)):
+                              use_prediction=True, gauge="slo")):
         print(" ", run_serving(["a100"], cfg, make_requests()).summary())
 
     print("\n== heterogeneous fleet: A100 + H100, dynamic slices ==")

@@ -23,6 +23,7 @@ Convergence: the prediction is reported once it is stable within
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -40,6 +41,12 @@ class Prediction:
     trend_slope: float         # a — bytes per iteration
     sigma: float               # residual std of the memory fit
     reuse_at_horizon: float    # predicted reuse ratio at max_iter
+    #: std of the *peak estimate itself*: sigma scaled into peak units when
+    #: the fitted extrapolation produced the peak, 0.0 when the observed
+    #: floor (max requested x min reuse) won the max — the floor is a hard
+    #: lower bound, not a normal fit, so no margin was added to strip back
+    #: out.  None (old callers) falls back to sigma * reuse_at_horizon.
+    sigma_peak_bytes: float | None = None
 
 
 def _linfit(ys: np.ndarray) -> tuple[float, float, float]:
@@ -108,8 +115,10 @@ class PeakMemoryPredictor:
         inv_at_T = max(c * T + d, 1.0)  # reuse ratio cannot exceed 1 requested
         reuse_at_T = 1.0 / inv_at_T
         # requested memory is cumulative; physical demand = requested * reuse
-        peak = max(req_at_T * reuse_at_T, max(self.req_mem_list)
-                   * min(self.reuse_ratio_list))
+        fitted = req_at_T * reuse_at_T
+        floor = max(self.req_mem_list) * min(self.reuse_ratio_list)
+        peak = max(fitted, floor)
+        sigma_peak = sigma * reuse_at_T if fitted >= floor else 0.0
         peak += self.workspace_bytes + self.context_bytes
 
         # CONVERGE check
@@ -121,7 +130,8 @@ class PeakMemoryPredictor:
 
         return Prediction(iteration=it, peak_mem_bytes=peak,
                           converged=converged, trend_slope=a, sigma=sigma,
-                          reuse_at_horizon=reuse_at_T)
+                          reuse_at_horizon=reuse_at_T,
+                          sigma_peak_bytes=sigma_peak)
 
     # -- scheduler-facing helpers ----------------------------------------------
 
@@ -132,6 +142,27 @@ class PeakMemoryPredictor:
         if require_converged and not pred.converged:
             return False
         return pred.peak_mem_bytes > partition_bytes
+
+    def oom_risk(self, partition_bytes: float, pred: Prediction) -> float:
+        """P(true peak > partition) under the fit's residual model — the
+        *graded* form of :meth:`will_oom` for cost models that trade a
+        predicted miss against a reconfiguration instead of thresholding.
+
+        ``sigma_peak_bytes`` records exactly the margin ``observe`` built
+        into ``peak_mem_bytes``: stripping ``z * sigma_peak`` recovers the
+        fit's mean, and the normal residual assumption gives the tail mass
+        above the partition.  When the observed floor produced the peak
+        (``sigma_peak_bytes == 0`` — no margin was added), or the fit has
+        no residual, this degenerates to the exact threshold.
+        """
+        sigma_peak = pred.sigma_peak_bytes
+        if sigma_peak is None:          # pre-field callers: fitted-branch
+            sigma_peak = pred.sigma * pred.reuse_at_horizon
+        mean_peak = pred.peak_mem_bytes - self.z * sigma_peak
+        if sigma_peak <= 0.0:
+            return 1.0 if mean_peak > partition_bytes else 0.0
+        z = (partition_bytes - mean_peak) / sigma_peak
+        return 0.5 * math.erfc(z / math.sqrt(2.0))
 
 
 def run_to_convergence(trajectory_req: list[float],

@@ -24,8 +24,9 @@ from repro.core.planner.cost import (BEST_FIT_DEVICE_COST, CostModel,
                                      CostTerms, ENERGY_AWARE_DEVICE_COST,
                                      FOLLOW_THE_SUN_ZONE_COST,
                                      PRICE_GREEDY_ZONE_COST, SCHEME_B_COST,
-                                     SERVING_GROW_COST,
-                                     normalized_reachability)
+                                     SERVING_GROW_COST, SLO_MISS_PENALTY_S,
+                                     normalized_reachability,
+                                     serving_grow_cost)
 from repro.core.planner.graph import (TransitionGraph,
                                       compile_transition_graph)
 from repro.core.planner.ladders import (grow_ladder, grow_request,
@@ -41,7 +42,8 @@ __all__ = [
     "Grow", "Migrate", "PRICE_GREEDY_ZONE_COST",
     "PartitionPlanner", "Plan", "PlanRequest", "PlanResult",
     "ReshapeFuseFission", "ReuseIdle", "SCHEME_B_COST", "SERVING_GROW_COST",
-    "TransitionGraph", "Wait", "compile_transition_graph", "grow_ladder",
-    "grow_request", "normalized_reachability", "place_request",
-    "placement_ladder", "predicted_rung", "restart_rung", "tight_profile",
+    "SLO_MISS_PENALTY_S", "TransitionGraph", "Wait",
+    "compile_transition_graph", "grow_ladder", "grow_request",
+    "normalized_reachability", "place_request", "placement_ladder",
+    "predicted_rung", "restart_rung", "serving_grow_cost", "tight_profile",
 ]

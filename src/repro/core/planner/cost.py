@@ -16,6 +16,14 @@ equal terms fall through to the next), which is what lets the planner
 reproduce the deleted hand-rolled ladders bit-for-bit while remaining one
 shared scoring function.  Negative weights express "larger is better"
 (reachability).
+
+A tier may also be a *group* — a tuple of ``(feature, weight)`` pairs
+summed into one scalar — for decisions that genuinely trade quantities
+off against each other rather than rank them: the serving grow model's
+top tier weighs the expected seconds a predicted p99 SLO miss costs
+against the reconfiguration seconds a growth would pay, so an engine
+reconfigures exactly when the forecast miss is the more expensive of the
+two (MISO's predicted-pressure reconfiguration, arXiv:2207.11428).
 """
 
 from __future__ import annotations
@@ -42,6 +50,23 @@ class CostTerms:
     free_after_gb: float = 0.0   # device memory left free after the action
     energy_price: float = 0.0    # tariff-weighted idle draw, $/s at the zone
     data_movement_s: float = 0.0 # cross-zone checkpoint/input transfer secs
+    #: requests waiting per batch slot — recorded on every serving grow
+    #: candidate for plan explainability and the learned-weights feature
+    #: vocabulary (ROADMAP); no built-in model weighs it: within one plan
+    #: it is request-constant, so only a cross-plan (learned) weighting
+    #: could discriminate on it
+    queue_depth: float = 0.0
+    slo_violation_prob: float = 0.0  # predicted p99 TTFT/TPOT miss prob.
+    reach_delta: float = 0.0     # |F_s| change the action causes (graph)
+
+
+def _tier_value(tier, terms: CostTerms) -> float:
+    """One lexicographic tier: ``(feature, weight)``, or a group — a tuple
+    of such pairs summed into one scalar (a true trade-off)."""
+    if isinstance(tier[0], str):
+        f, w = tier
+        return w * getattr(terms, f)
+    return sum(w * getattr(terms, f) for f, w in tier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,14 +74,18 @@ class CostModel:
     """Prioritized weighted terms; policies differ only in ``weights``."""
 
     name: str
-    weights: tuple[tuple[str, float], ...]
+    weights: tuple
 
     def cost(self, terms: CostTerms) -> tuple[float, ...]:
-        return tuple(w * getattr(terms, f) for f, w in self.weights)
+        return tuple(_tier_value(t, terms) for t in self.weights)
 
     def explain(self, terms: CostTerms) -> str:
-        return " ".join(f"{f}={w * getattr(terms, f):g}"
-                        for f, w in self.weights)
+        def label(tier) -> str:
+            if isinstance(tier[0], str):
+                return f"{tier[0]}={_tier_value(tier, terms):g}"
+            inner = "+".join(f for f, _ in tier)
+            return f"({inner})={_tier_value(tier, terms):g}"
+        return " ".join(label(t) for t in self.weights)
 
 
 #: Scheme B's placement preference (paper Alg. 5 + §4.3): avoid paying a
@@ -71,15 +100,34 @@ SCHEME_B_COST = CostModel("scheme_b", (
     ("reach", -1.0),
 ))
 
-#: Serving-engine growth (paper §4.3 lifted to request level): the grow
-#: ladder already encodes memory need + the soft compute constraint, so
-#: rank dominates; then prefer the least disruptive mechanism, then the
-#: reachability-maximal placement.
-SERVING_GROW_COST = CostModel("serving_grow", (
-    ("ladder_rank", 1.0),
-    ("disturbance", 1.0),
-    ("reach", -1.0),
-))
+#: Seconds-equivalent price of a predicted p99 SLO miss — the exchange
+#: rate the serving grow model's top tier converts a violation
+#: probability into, so it lands in the same unit as ``reconfig_s``.
+#: Far above any single MIG reconfiguration (~0.3s): a *certain* miss
+#: always buys a reconfiguration, a near-zero risk never does, and the
+#: crossover sits at ``reconfig_s / SLO_MISS_PENALTY_S`` miss probability.
+SLO_MISS_PENALTY_S = 60.0
+
+
+def serving_grow_cost(miss_penalty_s: float = SLO_MISS_PENALTY_S) -> CostModel:
+    """Serving-engine growth (paper §4.3 lifted to request level, MISO's
+    predicted-pressure trigger): the top tier *trades* the expected
+    seconds a predicted p99 TTFT/TPOT miss costs against the
+    reconfiguration seconds the growth pays — a ``Wait``/stay candidate
+    carries the uncured violation probability at zero reconfiguration,
+    each grow rung carries its relief-scaled residual probability plus
+    the reconfiguration.  Ties (no pressure, or equal cure) fall through
+    to the grow ladder, the least disruptive mechanism, then the
+    graph-computed reachability delta (keep |F_s| maximal)."""
+    return CostModel("serving_grow", (
+        (("slo_violation_prob", miss_penalty_s), ("reconfig_s", 1.0)),
+        ("ladder_rank", 1.0),
+        ("disturbance", 1.0),
+        ("reach_delta", -1.0),
+    ))
+
+
+SERVING_GROW_COST = serving_grow_cost()
 
 #: Fleet device ranking, best-fit flavour: never wake a gated device if an
 #: awake one fits, waste the least slice memory, fill the fullest device,

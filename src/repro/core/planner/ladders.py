@@ -93,10 +93,22 @@ def place_request(backend: PartitionBackend, est_mem_gb: float | None,
 
 def grow_request(backend: PartitionBackend, current: Partition,
                  predicted_gb: float | None,
-                 compute_demand: float) -> PlanRequest:
+                 compute_demand: float,
+                 reconfig_cost_s: float = 0.0,
+                 queue_depth: float = 0.0,
+                 slo_violation_prob: float = 0.0,
+                 slo_relief: float | None = None,
+                 needed_compute: float = 0.0,
+                 allow_stay: bool = False) -> PlanRequest:
     """A grow/migrate request for a live partition (serving engines).  The
     current slice is released first; idle reuse is off — a migration always
-    re-carves so the released space can fuse into the target."""
+    re-carves so the released space can fuse into the target.
+
+    SLO-pressure growth passes ``slo_violation_prob`` (+ ``allow_stay``)
+    so the plan *trades* the predicted p99 miss against ``reconfig_cost_s``
+    — see :func:`repro.core.planner.cost.serving_grow_cost`; memory-forced
+    growth (OOM, converged predictor) leaves them zero, making every rung
+    tie on the trade tier and fall through to the ladder order."""
     ladder = grow_ladder(backend, current.profile, predicted_gb,
                          compute_demand)
     return PlanRequest(ladder=ladder,
@@ -104,4 +116,10 @@ def grow_request(backend: PartitionBackend, current: Partition,
                        else ladder[0].mem_gb,
                        compute_demand=compute_demand,
                        reuse_idle=False,
-                       release=current)
+                       reconfig_cost_s=reconfig_cost_s,
+                       release=current,
+                       queue_depth=queue_depth,
+                       slo_violation_prob=slo_violation_prob,
+                       slo_relief=slo_relief,
+                       needed_compute=needed_compute,
+                       allow_stay=allow_stay)

@@ -39,6 +39,23 @@ class PlanRequest:
     allow_reshape: bool = True          # may fuse/fission idle partitions
     reconfig_cost_s: float = 0.0        # setup seconds a new carve costs
     release: Partition | None = None    # Grow: free this partition first
+    # -- SLO pressure (serving growth; see cost.serving_grow_cost) --------
+    queue_depth: float = 0.0            # waiting requests per batch slot
+    slo_violation_prob: float = 0.0     # predicted p99 miss prob. if we stay
+    #: residual violation probability fraction an action leaves: None
+    #: derives it per candidate (see ``_relief``), a number applies
+    #: uniformly (0.0 = any growth fully cures — the queue-tick
+    #: emulation's step semantics)
+    slo_relief: float | None = None
+    #: compute fraction the pressure gauge forecasts as sufficient —
+    #: candidates at/above it relieve fully, so the ladder's tightest
+    #: sufficient rung wins instead of the biggest slice; 0 falls back to
+    #: the plain compute ratio
+    needed_compute: float = 0.0
+    #: score staying put (a Wait carrying the uncured violation
+    #: probability) as a real candidate, so growth happens exactly when
+    #: the predicted miss outweighs the reconfiguration
+    allow_stay: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +81,8 @@ class Plan:
         if self.chosen is None:
             return Wait("no feasible placement")
         act = self.chosen.action
+        if isinstance(act, Wait):
+            return act                  # stay put: nothing is released
         if self.request.release is not None:
             return Grow(self.request.release, act)
         return act
@@ -120,25 +139,31 @@ class PartitionPlanner:
             idle_parts.append(part)
             idle_by_name.setdefault(part.profile.name, part)
 
+        # the live state's |F_s| anchors every candidate's reach_delta (the
+        # graph-computed change the action causes; one lookup per state)
+        live_reach = pm.reach(pm.state)
         reshape_state: Hashable | None = None  # computed at most once
         candidates: list[Candidate] = []
         for rank, profile in enumerate(request.ladder):
             waste = profile.mem_gb - request.need_gb
             deficit = max(0.0, request.compute_demand
                           - profile.compute_fraction)
+            relief = self._relief(request, profile)
             if request.reuse_idle and profile.name in idle_by_name:
                 idle = idle_by_name[profile.name]
                 candidates.append(self._candidate(
                     model, ReuseIdle(idle), reconfig_s=0.0, rank=rank,
-                    disturbance=0, state=base_state,
-                    waste=waste, deficit=deficit))
+                    disturbance=0, state=base_state, live_reach=live_reach,
+                    waste=waste, deficit=deficit, request=request,
+                    relief=relief))
             placement = pm.best_placement(base_state, profile)
             if placement is not None:
                 candidates.append(self._candidate(
                     model, FreshAllocate(placement),
                     reconfig_s=request.reconfig_cost_s, rank=rank,
                     disturbance=0, state=placement.next_state,
-                    waste=waste, deficit=deficit))
+                    live_reach=live_reach, waste=waste, deficit=deficit,
+                    request=request, relief=relief))
             elif request.allow_reshape and idle_parts:
                 if reshape_state is None:
                     reshape_state = base_state
@@ -151,21 +176,57 @@ class PartitionPlanner:
                                                   tuple(idle_parts)),
                         reconfig_s=request.reconfig_cost_s, rank=rank,
                         disturbance=len(idle_parts),
-                        state=placement.next_state,
-                        waste=waste, deficit=deficit))
+                        state=placement.next_state, live_reach=live_reach,
+                        waste=waste, deficit=deficit, request=request,
+                        relief=relief))
+        if request.allow_stay:
+            # staying put pays no reconfiguration but keeps the whole
+            # predicted violation probability; ladder_rank -1 makes it win
+            # ties (zero pressure must never buy a free reconfiguration)
+            terms = CostTerms(ladder_rank=-1.0, reach=float(live_reach),
+                              queue_depth=request.queue_depth,
+                              slo_violation_prob=request.slo_violation_prob)
+            candidates.append(Candidate(action=Wait("stay: pressure below "
+                                                    "reconfiguration cost"),
+                                        terms=terms, cost=model.cost(terms)))
 
         chosen = min(candidates, key=lambda c: c.cost) if candidates else None
         return Plan(request=request, model=model, candidates=candidates,
                     chosen=chosen)
 
+    @staticmethod
+    def _relief(request: PlanRequest, profile: PartitionProfile) -> float:
+        """Residual violation-probability fraction after acquiring
+        ``profile``: explicit when the request pins it; zero at/above the
+        gauge's forecast ``needed_compute`` (any sufficient slice fully
+        cures, so tightness decides among them), linear in the shortfall
+        below it; plain compute ratio when no need was forecast."""
+        if request.slo_relief is not None:
+            return request.slo_relief
+        if request.release is None or profile.compute_fraction <= 0.0:
+            return 1.0
+        current = request.release.profile.compute_fraction
+        need = request.needed_compute
+        if need > 0.0:
+            if profile.compute_fraction >= need or need <= current:
+                return 0.0
+            return min(1.0, (need - profile.compute_fraction)
+                       / (need - current))
+        return min(1.0, current / profile.compute_fraction)
+
     def _candidate(self, model: CostModel, action: Action, *,
                    reconfig_s: float, rank: int, disturbance: int,
-                   state: Hashable, waste: float,
-                   deficit: float) -> Candidate:
+                   state: Hashable, live_reach: int, waste: float,
+                   deficit: float, request: PlanRequest,
+                   relief: float) -> Candidate:
+        reach = float(self.pm.reach(state))
         terms = CostTerms(reconfig_s=reconfig_s, ladder_rank=float(rank),
                           disturbance=float(disturbance),
-                          reach=float(self.pm.reach(state)),
-                          mem_waste_gb=waste, compute_deficit=deficit)
+                          reach=reach, reach_delta=reach - live_reach,
+                          mem_waste_gb=waste, compute_deficit=deficit,
+                          queue_depth=request.queue_depth,
+                          slo_violation_prob=(request.slo_violation_prob
+                                              * relief))
         return Candidate(action=action, terms=terms, cost=model.cost(terms))
 
     # -- commit ------------------------------------------------------------
@@ -175,14 +236,17 @@ class PartitionPlanner:
         do (Wait without a pending release)."""
         pm = self.pm
         request = plan.request
-        if plan.chosen is None:
+        if plan.chosen is None or isinstance(plan.chosen.action, Wait):
             if request.release is None:
                 return None
-            # failed grow: the search ran on hypothetical states only, so
-            # the pending release simply never happens — the live partition,
+            # failed grow — or a stay candidate that won the pressure
+            # trade: the search ran on hypothetical states only, so the
+            # pending release simply never happens — the live partition,
             # the FSM state and n_reconfigs are all exactly untouched
+            action = (plan.chosen.action if plan.chosen is not None
+                      else Wait("no feasible growth target"))
             return PlanResult(partition=request.release, setup_s=0.0,
-                              action=Wait("no feasible growth target"))
+                              action=action)
 
         action = plan.chosen.action
         if request.release is not None:

@@ -51,6 +51,11 @@ class Event:
     seq: int    # per-device run sequence for finishes, global otherwise
     kind: str = dataclasses.field(compare=False)
     payload: Any = dataclasses.field(compare=False, default=None)
+    #: a cancelled event is skipped without advancing the clock — heap
+    #: entries cannot be removed cheaply, so policies mark instead (e.g. a
+    #: fleet admission-recheck tick whose deferred job was admitted by an
+    #: earlier finish: popping it live would integrate phantom idle time)
+    cancelled: bool = dataclasses.field(compare=False, default=False)
 
 
 class SchedulingPolicy:
@@ -138,8 +143,9 @@ class EventKernel:
 
     def has_events(self, kind: str | None = None) -> bool:
         if kind is None:
-            return bool(self._heap)
-        return any(ev.kind == kind for ev in self._heap)
+            return any(not ev.cancelled for ev in self._heap)
+        return any(ev.kind == kind and not ev.cancelled
+                   for ev in self._heap)
 
     # -- device runs -------------------------------------------------------
 
@@ -183,6 +189,8 @@ class EventKernel:
             if not self._heap:
                 break
             ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
             self.t = ev.t
             if ev.kind == FINISH:
                 run = ev.payload.pop_next_finish()   # advances that device

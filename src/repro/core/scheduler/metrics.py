@@ -77,6 +77,8 @@ class FleetMetrics:
     per_device: list[Metrics]
     records: list[tuple[str, RunRecord]]   # (device, record)
     n_migrations: int = 0      # cross-device restarts (planner Migrate)
+    n_admission_deferrals: int = 0   # jobs the reach floor held back
+    n_admission_overrides: int = 0   # stall-escape admissions past the floor
 
     @property
     def throughput(self) -> float:
@@ -95,7 +97,8 @@ class FleetMetrics:
                 f"gated={self.gated_seconds:.0f}s "
                 f"jct={self.mean_jct:.1f}s oom={self.n_oom} "
                 f"early={self.n_early_restarts} reconf={self.n_reconfigs} "
-                f"migr={self.n_migrations}")
+                f"migr={self.n_migrations} "
+                f"defer={self.n_admission_deferrals}")
 
 
 @dataclasses.dataclass

@@ -11,6 +11,9 @@ cannot reach (MISO, arXiv:2207.11428; optimal MIG placement,
 arXiv:2409.06646).
 """
 
+from repro.core.scheduler.admission import (AdmissionController,
+                                            AdmissionDecision,
+                                            ArrivalForecast, reach_floor)
 from repro.fleet.arrivals import (diurnal_arrivals, jobs_from_trace,
                                   load_alibaba_csv, poisson_arrivals,
                                   synthetic_alibaba_rows)
@@ -24,11 +27,12 @@ from repro.fleet.router import (BestFitRouter, EnergyAwareRouter,
                                 device_cost_terms, make_router)
 
 __all__ = [
+    "AdmissionController", "AdmissionDecision", "ArrivalForecast",
     "BestFitRouter", "EnergyAwareRouter", "FleetCostSummary",
     "FleetEnergyIntegrator", "FleetMetrics", "FleetOrchestrator",
     "FleetPolicy", "PricedEnergyIntegrator", "RandomRouter", "Router",
     "RoundRobinRouter", "device_cost_terms", "diurnal_arrivals",
     "jobs_from_trace", "load_alibaba_csv", "make_device", "make_fleet",
-    "make_router", "poisson_arrivals", "run_fleet",
+    "make_router", "poisson_arrivals", "reach_floor", "run_fleet",
     "synthetic_alibaba_rows",
 ]

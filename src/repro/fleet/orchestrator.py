@@ -26,9 +26,11 @@ import functools
 from typing import Callable, Iterable, Sequence
 
 from repro.core.planner import Migrate
+from repro.core.scheduler.admission import AdmissionController
 from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
 from repro.core.scheduler.job import Job
-from repro.core.scheduler.kernel import (EventKernel, SchedulingPolicy)
+from repro.core.scheduler.kernel import (ARRIVAL, FINISH, RECONFIG,
+                                         EventKernel, SchedulingPolicy)
 from repro.core.scheduler.metrics import FleetMetrics
 from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import FleetEnergyIntegrator
@@ -60,17 +62,31 @@ def gate_idle_devices(devices: Sequence[DeviceSim]) -> None:
 
 
 class FleetPolicy(SchedulingPolicy):
-    """Router-driven dispatch over N devices, as a kernel policy."""
+    """Router-driven dispatch over N devices, as a kernel policy.
+
+    With an :class:`AdmissionController`, each planned placement is gated
+    on the post-action |F_s| staying above the graph-computed floor for
+    the forecast arrivals: a blocked job is *deferred* (left in the
+    queue, re-evaluated on the next finish or on a scheduled admission
+    tick), never dropped — and if the fleet would otherwise deadlock, the
+    floor is overridden so deferral can only delay, not starve.
+    """
 
     online = True
 
     def __init__(self, router: Router, wake_latency_s: float = WAKE_LATENCY_S,
-                 energy: FleetEnergyIntegrator | None = None) -> None:
+                 energy: FleetEnergyIntegrator | None = None,
+                 admission: AdmissionController | None = None) -> None:
         self.router = router
         self.wake_latency_s = wake_latency_s
         self.energy = energy
+        self.admission = admission
         self.name = router.name
         self.n_migrations = 0
+        self.n_admission_overrides = 0
+        self._deferred_names: set[str] = set()
+        self._force_admit = False
+        self._recheck_tick = None                # live admission-recheck Event
         self._last_device: dict[str, str] = {}   # job name -> device name
 
     # -- dispatch ----------------------------------------------------------
@@ -79,7 +95,8 @@ class FleetPolicy(SchedulingPolicy):
                      devices: Sequence[DeviceSim] | None = None,
                      extra_setup_s: float = 0.0):
         """Route one job over ``devices`` (default: every kernel device) and
-        commit to the first whose placement ladder succeeds.
+        commit to the first whose placement ladder succeeds AND whose
+        post-placement reachability passes admission (when controlled).
 
         This is the entry point for an *external* router — the cluster
         layer hands each fleet jobs restricted to that fleet's devices,
@@ -87,9 +104,23 @@ class FleetPolicy(SchedulingPolicy):
         Returns ``(device, committed action)`` or ``None``.
         """
         pool = kernel.devices if devices is None else devices
+        blocked = False
         for dev in self.router.rank(job, pool):
-            result = dev.planner.execute(dev.plan_place(job))
-            if result is None:
+            plan = dev.plan_place(job)
+            if plan.chosen is None:
+                continue
+            if self.admission is not None:
+                decision = self.admission.decide(dev.pm, plan, kernel.t,
+                                                 shares=len(pool))
+                if not decision.admit:
+                    if not self._force_admit:
+                        blocked = True
+                        continue
+                    # stall escape: this job is placed BELOW the floor —
+                    # count every such admission, not each escape round
+                    self.n_admission_overrides += 1
+            result = dev.planner.execute(plan)
+            if result is None:      # pragma: no cover - chosen was checked
                 continue
             action = result.action
             prev = self._last_device.get(job.name)
@@ -105,7 +136,23 @@ class FleetPolicy(SchedulingPolicy):
                 setup += self.wake_latency_s
             kernel.start(dev, job, result.partition, setup_s=setup)
             return dev, action
+        if blocked:
+            self._note_deferral(kernel, job)
         return None
+
+    def _note_deferral(self, kernel: EventKernel, job: Job) -> None:
+        """Every placeable device failed admission: the job stays queued.
+        Schedule an admission tick so the decision is revisited even if no
+        finish event arrives first (the forecast decays in the meantime)."""
+        self._deferred_names.add(job.name)
+        retry = self.admission.retry_s
+        if retry is not None and self._recheck_tick is None:
+            self._recheck_tick = kernel.schedule_tick(kernel.t + retry, self)
+
+    def on_tick(self, kernel: EventKernel, payload) -> None:
+        # admission recheck: the kernel loop re-runs dispatch after every
+        # event; the tick only needs to exist (and re-arm on re-deferral)
+        self._recheck_tick = None
 
     def forget(self, job_name: str) -> None:
         """Drop the job's placement history — it moved to another fleet, so
@@ -119,11 +166,22 @@ class FleetPolicy(SchedulingPolicy):
     def dispatch(self, kernel: EventKernel) -> bool:
         placed = drain_queue(kernel,
                              functools.partial(self._dispatch_one, kernel))
+        if not kernel.queue and self._recheck_tick is not None:
+            # every deferred job found a home via an earlier event: a live
+            # recheck tick would only stretch the run (and its idle-energy
+            # integral) past the real last finish
+            self._recheck_tick.cancelled = True
+            self._recheck_tick = None
         if self.router.consolidates:
             gate_idle_devices(kernel.devices)
         return placed
 
     # -- events ------------------------------------------------------------
+
+    def on_arrival(self, kernel: EventKernel, job) -> None:
+        if self.admission is not None:
+            self.admission.note_arrival(kernel.t, job)
+        kernel.queue.append(job)
 
     def on_finish(self, kernel: EventKernel, dev: DeviceSim, run) -> None:
         if run.plan.outcome in (OOM, EARLY_RESTART):
@@ -131,8 +189,25 @@ class FleetPolicy(SchedulingPolicy):
             kernel.queue.insert(0, run.job)   # restart: earliest arrival
 
     def on_stall(self, kernel: EventKernel) -> None:
-        if kernel.has_events():
-            return   # a future arrival (or reconfig) may unblock the queue
+        # an *external* event (arrival, finish, reconfig) may genuinely
+        # unblock the queue; our own admission-recheck ticks do not count —
+        # if they were all that remains, waiting would spin forever
+        if any(kernel.has_events(k) for k in (FINISH, RECONFIG, ARRIVAL)):
+            return
+        if self.admission is None and kernel.has_events():
+            return   # no admission ticks exist; preserve legacy behaviour
+        if self.admission is not None and not self._force_admit:
+            # nothing running, nothing coming, and the queue is (at least
+            # partly) admission-deferred: the floor must yield — deferral
+            # may delay work, never starve it (dispatch_job counts each
+            # job it places past the floor in n_admission_overrides)
+            self._force_admit = True
+            try:
+                placed = self.dispatch(kernel)
+            finally:
+                self._force_admit = False
+            if placed:
+                return
         worst = kernel.queue[0]
         raise RuntimeError(
             f"deadlock: {worst.name} "
@@ -167,7 +242,9 @@ class FleetPolicy(SchedulingPolicy):
             n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices),
             wasted_seconds=sum(d.wasted for d in kernel.devices),
             per_device=per_device, records=records,
-            n_migrations=self.n_migrations)
+            n_migrations=self.n_migrations,
+            n_admission_deferrals=len(self._deferred_names),
+            n_admission_overrides=self.n_admission_overrides)
 
 
 class FleetOrchestrator:
@@ -175,22 +252,27 @@ class FleetOrchestrator:
     thin kernel invocation with a :class:`FleetPolicy`."""
 
     def __init__(self, devices: Sequence[DeviceSim], router: Router,
-                 wake_latency_s: float = WAKE_LATENCY_S) -> None:
+                 wake_latency_s: float = WAKE_LATENCY_S,
+                 admission: AdmissionController | None = None) -> None:
         # device validation (non-empty, unique names) happens in
         # EventKernel.__init__ when run() builds the kernel
         self.devices = list(devices)
         self.router = router
         self.wake_latency_s = wake_latency_s
+        self.admission = admission
         self.energy = FleetEnergyIntegrator(self.devices)
 
     def run(self, jobs: Iterable[Job]) -> FleetMetrics:
-        policy = FleetPolicy(self.router, self.wake_latency_s, self.energy)
+        policy = FleetPolicy(self.router, self.wake_latency_s, self.energy,
+                             admission=self.admission)
         return EventKernel(self.devices, policy).run(jobs)
 
 
 def run_fleet(devices: Sequence[DeviceSim], router: Router,
               jobs: Iterable[Job],
-              wake_latency_s: float = WAKE_LATENCY_S) -> FleetMetrics:
+              wake_latency_s: float = WAKE_LATENCY_S,
+              admission: AdmissionController | None = None) -> FleetMetrics:
     """One-shot convenience wrapper."""
     return FleetOrchestrator(devices, router,
-                             wake_latency_s=wake_latency_s).run(jobs)
+                             wake_latency_s=wake_latency_s,
+                             admission=admission).run(jobs)

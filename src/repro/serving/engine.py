@@ -45,6 +45,14 @@ class EngineConfig:
     max_context: int = 512
     partition_gb: float | None = None      # slice the engine believes it has
     predict: bool = True                   # paper: time-series early restart
+    #: SLO-aware restart trade (mirrors the simulator's grow trade,
+    #: cost.serving_grow_cost): when both are set, the engine restarts as
+    #: soon as the predictor's graded OOM risk prices the expected crash
+    #: (``risk * crash_cost_s``) above one restart (``restart_cost_s``) —
+    #: instead of waiting for the converged point estimate to cross the
+    #: partition.  Left at 0.0, the paper's binary trigger is unchanged.
+    crash_cost_s: float = 0.0
+    restart_cost_s: float = 0.0
 
 
 class ServeEngine:
@@ -138,6 +146,17 @@ class ServeEngine:
         self._last_live = live
         self.accountant.end_iteration()
 
+    def _restart_now(self, partition_bytes: float, pred) -> bool:
+        """The early-restart decision: the graded SLO trade when priced
+        (expected crash seconds vs one restart), else the paper's binary
+        converged-prediction threshold."""
+        if self.ecfg.crash_cost_s > 0.0 and self.ecfg.restart_cost_s > 0.0:
+            if not pred.converged:
+                return False
+            risk = self.predictor.oom_risk(partition_bytes, pred)
+            return risk * self.ecfg.crash_cost_s > self.ecfg.restart_cost_s
+        return self.predictor.will_oom(partition_bytes, pred)
+
     def _check_memory(self, caches, upto: int) -> None:
         self._note_iteration(caches, upto)
         if not (self.ecfg.predict and self.ecfg.partition_gb):
@@ -145,7 +164,7 @@ class ServeEngine:
         stats = self.accountant.history[-1]
         pred = self.predictor.observe(stats.requested_bytes,
                                       stats.reuse_ratio)
-        if self.predictor.will_oom(self.ecfg.partition_gb * GB, pred):
+        if self._restart_now(self.ecfg.partition_gb * GB, pred):
             target = None
             if self.backend is not None:
                 target = early_restart_target(self.backend,

@@ -15,9 +15,17 @@ target.  This module simulates that regime at request granularity:
   scheduler uses; when the converged prediction exceeds the partition the
   engine *early-restarts* onto a larger slice through the shared partition
   planner (a :class:`~repro.core.planner.actions.Grow` plan over the
-  restart ladder, scored by ``SERVING_GROW_COST``), paying a
+  restart ladder, scored by ``serving_grow_cost``), paying a
   reconfiguration + KV-rebuild (re-prefill) cost instead of crashing
   mid-iteration and losing work,
+* latency pressure drives growth the same way: an SLO gauge
+  (:mod:`repro.serving.slo`) forecasts the p99 TTFT/TPOT violation
+  probability each iteration, and the grow plan *trades* that predicted
+  miss against the reconfiguration + rebuild it would pay — an explicit
+  stay candidate carries the uncured risk, so the engine reconfigures
+  exactly when the forecast miss is the more expensive side (the old
+  fixed queue-tick threshold survives only as the degenerate
+  ``gauge="queue_ticks"`` emulation the golden-parity tests pin),
 * SLO metrics come out the other end: TTFT, TPOT, p99 end-to-end
   latency and goodput (SLO-attaining requests per second), next to the
   energy integral — so fusion/fission and early restart are evaluated
@@ -36,16 +44,18 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from repro.core.memory.timeseries import PeakMemoryPredictor
+from repro.core.memory.timeseries import PeakMemoryPredictor, Prediction
 from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionProfile
-from repro.core.planner import (SERVING_GROW_COST, PartitionPlanner, Wait,
-                                grow_request)
+from repro.core.planner import (SERVING_GROW_COST, SLO_MISS_PENALTY_S,
+                                PartitionPlanner, Wait, grow_request,
+                                serving_grow_cost)
 from repro.core.scheduler.energy import EnergyIntegrator
 from repro.core.scheduler.job import GB
 from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
 from repro.core.scheduler.metrics import percentile
 from repro.fleet.devices import DEVICE_CATALOGUE
+from repro.serving.slo import SLOPressure, make_gauge
 
 MB = 1024 ** 2
 
@@ -179,18 +189,30 @@ class ServingConfig:
     #: (paper §4.3): without it Hopper's 1g.20gb profile traps a memory-
     #: hungry engine at 1/7 compute forever
     engine_compute_demand: float = 0.5
-    #: dynamic engines also fuse up after this many consecutive iterations
-    #: with requests still waiting (compute starvation shows up as queueing
-    #: long before the KV cache fills a high-memory slice); 0 disables
+    #: pressure signal for dynamic growth (:mod:`repro.serving.slo`):
+    #: ``"slo"`` forecasts the p99 TTFT/TPOT violation probability and
+    #: lets the cost model trade it against a reconfiguration;
+    #: ``"queue_ticks"`` is the deleted fixed threshold re-expressed as a
+    #: degenerate gauge (the golden-parity emulation + benchmark ablation)
+    gauge: str = "slo"
+    #: queue-tick gauge threshold (consecutive pressured iterations); 0
+    #: disables pressure-driven growth under EITHER gauge — memory
+    #: pressure (OOM, converged predictor) remains the only growth path
     scale_up_queue_ticks: int = 20
     slo_ttft_s: float = 6.0
     slo_tpot_s: float = 0.30
+    #: seconds-equivalent price of a predicted p99 miss — the exchange
+    #: rate of the grow trade (cost.serving_grow_cost)
+    slo_miss_penalty_s: float = SLO_MISS_PENALTY_S
 
     @property
     def name(self) -> str:
         if self.policy != "dynamic":
             return self.policy
-        return "dynamic" + ("+pred" if self.use_prediction else "")
+        n = "dynamic"
+        if self.gauge == "slo" and self.scale_up_queue_ticks > 0:
+            n += "+slo"
+        return n + ("+pred" if self.use_prediction else "")
 
 
 # ---------------------------------------------------------------------------
@@ -253,12 +275,15 @@ class EngineSim:
         self._tick_pending = False
         self._requested_cum = 0.0
         self.predictor = self._fresh_predictor()
+        self.last_prediction: Prediction | None = None
+        self.last_pressure: SLOPressure | None = None
+        self.gauge = make_gauge(cfg)
+        self.grow_cost = serving_grow_cost(cfg.slo_miss_penalty_s)
         self.n_oom = 0
         self.n_early = 0
         self.n_preemptions = 0
         self.n_dropped = 0
         self.n_scaleups = 0
-        self._pressure_ticks = 0
         self._grow_cooldown = 0
 
     # -- state helpers -----------------------------------------------------
@@ -292,6 +317,7 @@ class EngineSim:
 
     def enqueue(self, kernel: EventKernel, req: ServingRequest) -> None:
         self.waiting.append(req)
+        self.gauge.note_arrival(kernel.t)
         if not self.migrating and not self._tick_pending:
             self._admit(kernel)
             self._schedule_tick(kernel)
@@ -377,6 +403,7 @@ class EngineSim:
             self._requested_cum + self.model.base_bytes(),
             min((live_now) / max(self._requested_cum
                                  + self.model.base_bytes(), 1.0), 1.0))
+        self.last_prediction = pred
         if (self.cfg.use_prediction and self.running
                 and self.predictor.will_oom(self.part_bytes, pred)
                 and self._can_grow()
@@ -388,12 +415,22 @@ class EngineSim:
             return
 
         self._admit(kernel)
-        # compute pressure: the queue is not draining on this slice
-        self._pressure_ticks = self._pressure_ticks + 1 if self.waiting else 0
-        if (0 < self.cfg.scale_up_queue_ticks <= self._pressure_ticks
-                and self._can_grow()):
-            self._pressure_ticks = 0
-            if self._begin_migration(kernel, crashed=False):
+        # SLO pressure: the gauge forecasts the p99-miss probability; when
+        # it is nonzero the grow plan *trades* it against a reconfiguration
+        # (an explicit stay candidate carries the uncured risk) — the old
+        # fixed queue-tick threshold survives only as the degenerate
+        # QueueTickGauge whose probability is a 0/1 step
+        pressure = self.gauge.observe(self, kernel.t)
+        self.last_pressure = pressure
+        if pressure.violation_prob > 0.0 and self._can_grow():
+            self.gauge.attempt()
+            predicted = None
+            if (self.gauge.use_predicted_need and self.cfg.use_prediction
+                    and self.last_prediction is not None):
+                predicted = self.last_prediction.peak_mem_bytes / GB
+            if self._begin_migration(kernel, crashed=False,
+                                     predicted_gb=predicted,
+                                     pressure=pressure):
                 self.n_scaleups += 1
                 self.device.sync()
                 return
@@ -421,7 +458,8 @@ class EngineSim:
             self.partition.profile) is not None
 
     def _begin_migration(self, kernel: EventKernel, crashed: bool,
-                         predicted_gb: float | None = None) -> bool:
+                         predicted_gb: float | None = None,
+                         pressure: SLOPressure | None = None) -> bool:
         """Checkpointless restart onto a larger slice, through the shared
         partition planner: the growth ladder (predictor need or OOM restart
         rung, compute as the paper's soft constraint) is scored under the
@@ -429,16 +467,55 @@ class EngineSim:
         current partition and fuses/fissions space into the target — paying
         the reconfiguration plus the KV rebuild (re-prefill of every
         in-flight sequence), and a crash penalty if this is a post-OOM
-        restart.  Returns False when neighbours hold the space — the plan
-        degenerates to Wait and the engine's slice is left untouched."""
+        restart.
+
+        Memory-forced calls (OOM crash, converged predictor) leave
+        ``pressure`` None — every rung ties on the trade tier and the
+        ladder decides.  SLO-pressure calls carry the gauge's forecast:
+        the plan scores an explicit stay candidate, so growth happens
+        exactly when the predicted p99 miss outweighs the reconfiguration.
+        Returns False when the engine stays — either the trade kept the
+        slice (pressure keeps accumulating) or neighbours hold the space
+        (the engine backs off for a cooldown)."""
         dev = self.device
-        result = dev.planner.place(grow_request(
+        trade_cost_s = dev.reconfig_s
+        if pressure is not None and self.gauge.trade_rebuild_cost:
+            # the honest price of interrupting this engine: reconfiguration
+            # plus re-prefilling every in-flight sequence's KV
+            rebuild_tokens = sum(r.kv_tokens for r in self.running)
+            trade_cost_s += rebuild_tokens / (
+                self.model.prefill_tokens_per_s * max(self.compute, 1e-6))
+        demand = self.cfg.engine_compute_demand
+        if self.gauge.use_predicted_need:
+            # SLO-aware compute sizing: hold the current compute and raise
+            # it only as far as the gauge forecasts the SLO needs — a
+            # memory-forced grow under low pressure takes the memory-tight
+            # low-compute rung (Joules), and a later pressure grow raises
+            # compute when the forecast says so (SLO)
+            need = (pressure.needed_compute if pressure is not None
+                    else (self.last_pressure.needed_compute
+                          if self.last_pressure is not None else 0.0))
+            demand = max(self.compute, need)
+        plan = dev.planner.plan(grow_request(
             dev.backend, self.partition, predicted_gb,
-            self.cfg.engine_compute_demand))
+            demand,
+            reconfig_cost_s=trade_cost_s,
+            queue_depth=pressure.queue_depth if pressure else 0.0,
+            slo_violation_prob=(pressure.violation_prob if pressure
+                                else 0.0),
+            slo_relief=self.gauge.relief if pressure else None,
+            needed_compute=pressure.needed_compute if pressure else 0.0,
+            allow_stay=pressure is not None), model=self.grow_cost)
+        result = dev.planner.execute(plan)
         assert result is not None and result.partition is not None
         self.partition = result.partition
         self.partition.busy = True
         if isinstance(result.action, Wait):
+            if any(not isinstance(c.action, Wait) for c in plan.candidates):
+                # the stay candidate won on cost: the predicted miss is
+                # still cheaper than a reconfiguration — keep the slice,
+                # keep measuring (no cooldown: pressure may keep building)
+                return False
             # neighbours hold the space: back off and let the caller shed
             # load (the probe counted no reconfiguration)
             self._grow_cooldown = max(self.cfg.scale_up_queue_ticks, 10)
@@ -451,8 +528,9 @@ class EngineSim:
                + rebuild_tokens / (self.model.prefill_tokens_per_s * c)
                + (self.cfg.crash_penalty_s if crashed else 0.0))
         self.migrating = True
-        self._pressure_ticks = 0
+        self.gauge.reset()
         self.predictor = self._fresh_predictor()
+        self.last_prediction = None
         self._requested_cum = 0.0
         kernel.schedule_reconfig(kernel.t + dur, self)
         return True

@@ -1,0 +1,325 @@
+"""Graph-backed admission control: floor math (property-tested against
+brute-force enumeration on both MIG generations), the arrival forecast,
+and the fleet's reject-or-queue integration."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.planner import PartitionPlanner, SCHEME_B_COST, place_request
+from repro.core.planner.graph import compile_transition_graph
+from repro.core.partition_manager import PartitionManager
+from repro.core.reachability import precompute_reachability
+from repro.core.scheduler.admission import (AdmissionController,
+                                            ArrivalForecast, hosting_states,
+                                            reach_floor)
+from repro.core.scheduler.job import rodinia_job
+from repro.fleet import make_fleet, make_router, poisson_arrivals, run_fleet
+
+BACKENDS = {"a100": MigA100Backend, "h100": MigH100Backend}
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle: direct enumeration, no compiled graph involved
+# ---------------------------------------------------------------------------
+
+_BRUTE = {}
+
+
+def brute_hosts(backend, profile, k):
+    """state -> can k sequential `profile` placements start there, by
+    plain recursive enumeration over ``enumerate_placements``."""
+    key = (backend.__class__, profile.name, k)
+    if key in _BRUTE:
+        return _BRUTE[key]
+    fcr = precompute_reachability(backend)
+    memo = {}
+
+    def hosts(state, depth):
+        if depth == 0:
+            return True
+        got = memo.get((state, depth))
+        if got is None:
+            got = any(hosts(pl.next_state, depth - 1)
+                      for pl in backend.enumerate_placements(state, profile))
+            memo[(state, depth)] = got
+        return got
+
+    table = {s: hosts(s, k) for s in fcr}
+    _BRUTE[key] = (table, fcr)
+    return _BRUTE[key]
+
+
+def brute_floor(backend, profile, k):
+    table, fcr = brute_hosts(backend, profile, k)
+    blocked = [fcr[s] for s, ok in table.items() if not ok]
+    return max(blocked) + 1 if blocked else 0
+
+
+def random_state(backend, rng):
+    """Walk random placements from the empty device (possibly none)."""
+    state = backend.initial_state()
+    for _ in range(rng.randint(0, 6)):
+        profile = rng.choice(backend.profiles)
+        placements = backend.enumerate_placements(state, profile)
+        if not placements:
+            continue
+        state = rng.choice(list(placements)).next_state
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Properties (satellite: controller vs brute-force on A100 and H100)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", list(BACKENDS), ids=str)
+class TestFloorProperties:
+    @settings(max_examples=12, deadline=None)
+    @given(k=st.integers(min_value=1, max_value=4),
+           prof_idx=st.integers(min_value=0, max_value=10))
+    def test_graph_floor_matches_brute_force(self, model, k, prof_idx):
+        backend = BACKENDS[model]()
+        profile = backend.profiles[prof_idx % len(backend.profiles)]
+        graph = compile_transition_graph(backend)
+        assert reach_floor(graph, profile, k) == brute_floor(backend,
+                                                             profile, k)
+
+    @settings(max_examples=12, deadline=None)
+    @given(k=st.integers(min_value=1, max_value=3),
+           prof_idx=st.integers(min_value=0, max_value=10))
+    def test_floor_guarantees_hosting(self, model, k, prof_idx):
+        """The floor is sufficient: EVERY state at/above it hosts k more
+        placements — so an admitted job can never strand the forecast."""
+        backend = BACKENDS[model]()
+        profile = backend.profiles[prof_idx % len(backend.profiles)]
+        graph = compile_transition_graph(backend)
+        floor = reach_floor(graph, profile, k)
+        table, fcr = brute_hosts(backend, profile, k)
+        for state, reach in fcr.items():
+            if reach >= floor:
+                assert table[state], (
+                    f"{model}: |F_s|={reach} >= floor={floor} but "
+                    f"{k} x {profile.name} placements are impossible")
+
+    @settings(max_examples=12, deadline=None)
+    @given(k=st.integers(min_value=1, max_value=3),
+           prof_idx=st.integers(min_value=0, max_value=10),
+           seed=st.integers(min_value=0, max_value=2 ** 20))
+    def test_decision_thresholds_exactly(self, model, k, prof_idx, seed):
+        """The controller never admits a placement that lands below the
+        floor and never defers one that stays at/above it — checked on a
+        randomly-walked FSM state with the decision recomputed from
+        direct enumeration."""
+        backend = BACKENDS[model]()
+        profile = backend.profiles[prof_idx % len(backend.profiles)]
+        rng = random.Random(seed)
+        pm = PartitionManager(backend)
+        pm.state = random_state(backend, rng)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        plan = planner.plan(place_request(backend, profile.mem_gb, 0.0, 0.3))
+        if plan.chosen is None:
+            return          # nothing placeable from this state
+        ctrl = AdmissionController(horizon_s=10.0, max_lookahead=4)
+        # pin the forecast so required_placements == k and the typical
+        # profile is exactly the drawn one
+        ctrl.forecast._ewma_gap = 10.0 / k
+        ctrl.forecast._last_t = 0.0
+        ctrl.forecast._ewma_mem = profile.mem_gb
+        assert ctrl.required_placements(0.0, shares=1) == k
+        # same-memory profiles alias under tightest_profile; the oracle
+        # must score whichever the controller resolves to
+        typical = ctrl.typical_profile(backend)
+        assert typical.mem_gb >= profile.mem_gb
+        decision = ctrl.decide(pm, plan, 0.0, shares=1)
+        reach_after = backend.reachability(_chosen_state(plan, pm))
+        assert decision.reach_after == reach_after
+        assert decision.admit == (reach_after >= brute_floor(backend,
+                                                             typical, k))
+
+
+def _chosen_state(plan, pm):
+    """The FSM state the chosen action would leave, from the action itself
+    (independent of the planner's cached reach term)."""
+    from repro.core.planner import FreshAllocate, ReshapeFuseFission
+    action = plan.chosen.action
+    if isinstance(action, (FreshAllocate, ReshapeFuseFission)):
+        return action.placement.next_state
+    return pm.state
+
+
+# ---------------------------------------------------------------------------
+# Forecast + controller units
+# ---------------------------------------------------------------------------
+
+class TestArrivalForecast:
+    def test_rate_tracks_uniform_gaps(self):
+        f = ArrivalForecast(alpha=0.5)
+        for i in range(20):
+            f.observe(i * 2.0, est_mem_gb=8.0)
+        assert f.rate_per_s(38.0) == pytest.approx(0.5, rel=0.05)
+        assert f.typical_mem_gb == pytest.approx(8.0)
+
+    def test_rate_decays_with_silence(self):
+        f = ArrivalForecast()
+        for i in range(10):
+            f.observe(i * 0.5)
+        assert f.rate_per_s(5.0) > 1.0
+        assert f.rate_per_s(105.0) < 0.011
+
+    def test_no_arrivals_no_rate(self):
+        f = ArrivalForecast()
+        assert f.rate_per_s(100.0) == 0.0
+        assert f.expected_arrivals(100.0, 30.0) == 0.0
+        f.observe(1.0)       # a single arrival has no gap yet
+        assert f.rate_per_s(1.0) == 0.0
+
+    def test_required_placements_rounds_not_ceils(self):
+        ctrl = AdmissionController(horizon_s=10.0, max_lookahead=4)
+        ctrl.forecast._ewma_gap = 1.0
+        ctrl.forecast._last_t = 0.0
+        # rate 1/s * 10s horizon over 4 devices = 2.5 -> 3 (nearest)
+        assert ctrl.required_placements(0.0, shares=4) == 3
+        # decayed burst: 0.01 expected arrivals must demand NOTHING, or
+        # the last job of every burst would be deferred forever
+        ctrl.forecast._last_t = -2000.0
+        assert ctrl.required_placements(0.0, shares=1) == 0
+
+    def test_required_placements_caps_at_lookahead(self):
+        ctrl = AdmissionController(horizon_s=100.0, max_lookahead=4)
+        ctrl.forecast._ewma_gap = 0.1
+        ctrl.forecast._last_t = 0.0
+        assert ctrl.required_placements(0.0) == 4
+
+
+class TestControllerDecisions:
+    def _plan(self, backend, pm):
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        return planner.plan(place_request(backend, 5.0, 0.0, 0.3))
+
+    def test_quiet_forecast_admits_everything(self):
+        backend = MigA100Backend()
+        pm = PartitionManager(backend)
+        ctrl = AdmissionController()
+        d = ctrl.decide(pm, self._plan(backend, pm), t=0.0)
+        assert d.admit and d.floor == 0
+        assert "no forecast arrivals" in d.reason
+
+    def test_uncompiled_backend_admits(self):
+        from repro.core.tpu_slices import TpuPodBackend
+        backend = TpuPodBackend()
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        plan = planner.plan(place_request(backend, 8.0, 0.0, 0.3))
+        ctrl = AdmissionController()
+        ctrl.forecast._ewma_gap = 0.1     # hot forecast
+        ctrl.forecast._last_t = 0.0
+        assert ctrl.decide(pm, plan, t=0.0).admit
+
+    def test_describe_names_the_verdict(self):
+        backend = MigA100Backend()
+        pm = PartitionManager(backend)
+        ctrl = AdmissionController()
+        d = ctrl.decide(pm, self._plan(backend, pm), t=0.0)
+        assert d.describe().startswith("admit:")
+
+
+# ---------------------------------------------------------------------------
+# Fleet integration: reject-or-queue, never drop, never deadlock
+# ---------------------------------------------------------------------------
+
+def _burst(n, rate, seed=13):
+    names = ["myocyte", "gaussian", "srad", "euler3d", "particlefilter",
+             "nw", "lavamd", "hotspot3d", "cfd_full"]
+    return poisson_arrivals([rodinia_job(names[i % len(names)], i)
+                             for i in range(n)], rate_per_s=rate, seed=seed)
+
+
+class TestFleetAdmission:
+    def test_deferral_queues_and_eventually_completes(self):
+        m = run_fleet(make_fleet(["a100", "h100"]), make_router("best_fit"),
+                      _burst(40, rate=2.0),
+                      admission=AdmissionController(horizon_s=20.0))
+        assert m.n_jobs == 40
+        assert m.n_admission_deferrals >= 1
+        assert m.mean_jct > 0 and m.makespan > 0
+
+    def test_without_admission_metrics_are_legacy(self):
+        a = run_fleet(make_fleet(["a100", "h100"]), make_router("best_fit"),
+                      _burst(24, rate=0.8))
+        assert a.n_admission_deferrals == 0
+        assert a.n_admission_overrides == 0
+
+    def test_admission_changes_placement_under_burst(self):
+        base = run_fleet(make_fleet(["a100", "h100"]),
+                         make_router("best_fit"), _burst(40, rate=2.0))
+        gated = run_fleet(make_fleet(["a100", "h100"]),
+                          make_router("best_fit"), _burst(40, rate=2.0),
+                          admission=AdmissionController(horizon_s=20.0))
+        assert gated.n_admission_deferrals >= 1
+        # deferral trades latency for reachability headroom, never work
+        assert gated.n_jobs == base.n_jobs == 40
+
+    def test_starvation_escape_overrides_floor(self):
+        """A forecast pinned hot forever must not starve the queue: the
+        stall path force-admits once nothing external is pending."""
+        ctrl = AdmissionController(horizon_s=30.0, retry_s=None)
+
+        class PinnedForecast(ArrivalForecast):
+            def rate_per_s(self, t):
+                return 10.0      # never decays
+
+        pinned = PinnedForecast()
+        ctrl.forecast = pinned
+        m = run_fleet(make_fleet(["a100"]), make_router("best_fit"),
+                      _burst(6, rate=5.0), admission=ctrl)
+        assert m.n_jobs == 6
+        assert m.n_admission_overrides >= 1
+
+    def test_deterministic_with_admission(self):
+        import dataclasses
+        runs = []
+        for _ in range(2):
+            m = run_fleet(make_fleet(["a100", "h100"]),
+                          make_router("best_fit"), _burst(30, rate=1.5),
+                          admission=AdmissionController(horizon_s=15.0))
+            runs.append((m.makespan, m.energy_j, m.mean_jct,
+                         m.n_admission_deferrals, m.n_admission_overrides,
+                         dataclasses.asdict(m)["per_device"]))
+        assert runs[0] == runs[1]
+
+
+class TestHostingDP:
+    def test_hosting_states_k1_is_placeability(self):
+        backend = MigA100Backend()
+        graph = compile_transition_graph(backend)
+        profile = backend.profiles[0]
+        hosts = hosting_states(graph, profile, 1)
+        for sid, state in enumerate(graph.states):
+            assert hosts[sid] == bool(
+                backend.enumerate_placements(state, profile))
+
+    def test_hosting_monotone_in_k(self):
+        backend = MigH100Backend()
+        graph = compile_transition_graph(backend)
+        profile = backend.profiles[2]
+        h1 = hosting_states(graph, profile, 1)
+        h3 = hosting_states(graph, profile, 3)
+        for a, b in zip(h3, h1):
+            if a:
+                assert b          # hosting 3 implies hosting 1
+
+    def test_floor_zero_for_k_zero(self):
+        backend = MigA100Backend()
+        graph = compile_transition_graph(backend)
+        assert reach_floor(graph, backend.profiles[0], 0) == 0
+
+    def test_floor_monotone_in_k(self):
+        backend = MigA100Backend()
+        graph = compile_transition_graph(backend)
+        profile = backend.profiles[0]
+        floors = [reach_floor(graph, profile, k) for k in range(1, 5)]
+        assert floors == sorted(floors)

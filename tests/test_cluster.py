@@ -4,11 +4,63 @@ accounting, cross-zone migration counting, and seeded determinism."""
 import math
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.cluster import (CROSS_ZONE_GBPS, CROSS_ZONE_SETUP_S, ZoneTariff,
                            checkpoint_movement_s, cluster_workload, make_zone,
                            make_zone_router, run_cluster, zone_cost_terms)
 from repro.core.scheduler.job import Job, rodinia_job
+
+
+class TestMeanPriceClosedForm:
+    """Property: ``ZoneTariff.mean_price``'s closed-form sinusoid integral
+    matches numerical integration over arbitrary run windows — the math
+    the follow-the-sun forecast router (PR 4) scores every job with."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(trough=st.floats(min_value=0.01, max_value=0.5),
+           spread=st.floats(min_value=0.0, max_value=1.0),
+           period=st.floats(min_value=60.0, max_value=200_000.0),
+           phase_frac=st.floats(min_value=-2.0, max_value=2.0),
+           t0=st.floats(min_value=-50_000.0, max_value=50_000.0),
+           width_frac=st.floats(min_value=1e-3, max_value=5.0))
+    def test_matches_numerical_integration(self, trough, spread, period,
+                                           phase_frac, t0, width_frac):
+        tariff = ZoneTariff("prop", trough, trough + spread,
+                            period_s=period, phase_s=phase_frac * period)
+        t1 = t0 + width_frac * period
+        n = 4000
+        dt = (t1 - t0) / n
+        # composite midpoint rule: error O(dt^2), far below the tolerance
+        numeric = sum(tariff.price_at(t0 + (i + 0.5) * dt)
+                      for i in range(n)) * dt / (t1 - t0)
+        closed = tariff.mean_price(t0, t1)
+        assert closed == pytest.approx(numeric, rel=1e-4, abs=1e-15)
+
+    @settings(max_examples=20, deadline=None)
+    @given(t0=st.floats(min_value=-1000.0, max_value=1000.0),
+           period=st.floats(min_value=60.0, max_value=86400.0))
+    def test_degenerate_window_is_instantaneous_price(self, t0, period):
+        tariff = ZoneTariff("prop", 0.05, 0.25, period_s=period)
+        assert tariff.mean_price(t0, t0) == tariff.price_at(t0)
+        assert tariff.mean_price(t0, t0 - 5.0) == tariff.price_at(t0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(min_value=1, max_value=5),
+           t0=st.floats(min_value=-500.0, max_value=500.0))
+    def test_whole_periods_average_to_midpoint(self, k, t0):
+        tariff = ZoneTariff("prop", 0.04, 0.28, period_s=360.0)
+        mid = 0.5 * (0.04 + 0.28) / 3.6e6
+        assert tariff.mean_price(t0, t0 + k * 360.0) == pytest.approx(mid)
+
+    @settings(max_examples=20, deadline=None)
+    @given(t0=st.floats(min_value=0.0, max_value=86400.0),
+           width=st.floats(min_value=1.0, max_value=86400.0))
+    def test_mean_bounded_by_trough_and_peak(self, t0, width):
+        tariff = ZoneTariff("prop", 0.05, 0.25)
+        mean = tariff.mean_price(t0, t0 + width)
+        assert 0.05 / 3.6e6 - 1e-18 <= mean <= 0.25 / 3.6e6 + 1e-18
 
 
 def _tou(trough=0.05, peak=0.25, period=200.0):

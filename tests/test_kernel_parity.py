@@ -134,13 +134,20 @@ SERVING_GOLDEN = {
     "a100_static": {"policy": "static", "n_requests": 120, "n_completed": 120, "n_dropped": 0, "makespan": 128.0362114022536, "energy_j": 26555.45962712428, "mean_ttft": 0.08751606312142979, "p99_ttft": 0.1402094916094089, "mean_tpot": 0.04229120417324757, "p99_tpot": 0.05138595021645031, "p99_latency": 48.733239993180085, "goodput_rps": 0.9372348547786524, "throughput_rps": 0.9372348547786524, "tokens_per_s": 235.19908680670284, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 2},
 }
 
+#: the pre-planner goldens were captured under the fixed queue-tick growth
+#: threshold; the SLO refactor keeps that decision reachable as the
+#: degenerate ``gauge="queue_ticks"`` configuration (serving/slo.py), which
+#: these cases pin bit-for-bit.
 _SERVING_CASES = {
     "a100_dynamic_pred": (["a100"], dict(policy="dynamic", n_engines=2,
-                                         use_prediction=True), 120),
+                                         use_prediction=True,
+                                         gauge="queue_ticks"), 120),
     "a100_dynamic_nopred": (["a100"], dict(policy="dynamic", n_engines=2,
-                                           use_prediction=False), 200),
+                                           use_prediction=False,
+                                           gauge="queue_ticks"), 200),
     "h100_dynamic_nopred": (["h100"], dict(policy="dynamic", n_engines=2,
-                                           use_prediction=False), 200),
+                                           use_prediction=False,
+                                           gauge="queue_ticks"), 200),
     "a100_static": (["a100"], dict(policy="static", n_engines=2), 120),
 }
 
@@ -162,6 +169,76 @@ def test_planner_serving_reproduces_pre_planner_metrics(case):
         assert getattr(metrics, field) == want, (
             f"serving/{case}: {field} drifted from the pre-planner ladder: "
             f"{getattr(metrics, field)!r} != {want!r}")
+
+
+# ---------------------------------------------------------------------------
+# SLO-refactor parity: the queue-tick gauge emulation reproduces the
+# pre-SLO fixed-threshold growth bit-for-bit.
+# ---------------------------------------------------------------------------
+# The values below were produced by the pre-refactor serving simulation
+# (the hard-coded ``scale_up_queue_ticks`` branch in ``EngineSim.step``,
+# before the SLO gauge + cost-model trade replaced it) on the exact
+# ``benchmarks/bench_serving.py`` workload — all four policy configs on
+# both device generations, 300 Poisson requests @ 2.0/s, seed 11 —
+# captured at full float repr precision.  The refactored engine runs the
+# same configs through ``gauge="queue_ticks"`` (a degenerate SLO gauge
+# whose violation probability is a 0/1 step) and must reproduce every
+# metric with ``==``: the trade tier, stay candidate, relief scaling and
+# reach_delta swap are all required to preserve the legacy decision
+# exactly when so configured.
+
+BENCH_SERVING_GOLDEN = {
+    "a100_full": {"policy": "full", "fleet": "a100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 154.43890454898855, "energy_j": 38587.340875195405, "mean_ttft": 0.046399419156430005, "p99_ttft": 0.1164669071140838, "mean_tpot": 0.021329254730449068, "p99_tpot": 0.036814258965516065, "p99_latency": 19.911899105751402, "goodput_rps": 1.9425157208677233, "throughput_rps": 1.9425157208677233, "tokens_per_s": 436.2825558544878, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 1},
+    "a100_static": {"policy": "static", "fleet": "a100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 180.0285169577905, "energy_j": 38782.0645576759, "mean_ttft": 0.10557952793243428, "p99_ttft": 0.2103110373080038, "mean_tpot": 0.05238419368556628, "p99_tpot": 0.07112881704980786, "p99_latency": 54.633997522417204, "goodput_rps": 1.666402662586717, "throughput_rps": 1.666402662586717, "tokens_per_s": 374.26848334143466, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 2},
+    "a100_dynamic": {"policy": "dynamic", "fleet": "a100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 172.69389621565452, "energy_j": 36457.63927400192, "mean_ttft": 0.1780760371424912, "p99_ttft": 2.368075146895905, "mean_tpot": 0.06093214345461378, "p99_tpot": 0.1161200522030708, "p99_latency": 61.86544018023633, "goodput_rps": 1.7371777843576461, "throughput_rps": 1.7371777843576461, "tokens_per_s": 390.16433977411276, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 2, "n_reconfigs": 4},
+    "a100_dynamic+pred": {"policy": "dynamic+pred", "fleet": "a100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 177.7877670489873, "energy_j": 38178.11116983523, "mean_ttft": 0.11417292420777495, "p99_ttft": 0.2634979498941465, "mean_tpot": 0.055326835621272906, "p99_tpot": 0.1070418864436681, "p99_latency": 69.29085083379752, "goodput_rps": 1.6874051852922962, "throughput_rps": 1.6874051852922962, "tokens_per_s": 378.9855799326988, "n_oom": 0, "n_early_restarts": 2, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 4},
+    "h100_full": {"policy": "full", "fleet": "h100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 154.43890454898855, "energy_j": 108035.48554949705, "mean_ttft": 0.046399419156430005, "p99_ttft": 0.1164669071140838, "mean_tpot": 0.021329254730449068, "p99_tpot": 0.036814258965516065, "p99_latency": 19.911899105751402, "goodput_rps": 1.9425157208677233, "throughput_rps": 1.9425157208677233, "tokens_per_s": 436.2825558544878, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 1},
+    "h100_static": {"policy": "static", "fleet": "h100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 180.0285169577905, "energy_j": 106067.83148016226, "mean_ttft": 0.10557952793243428, "p99_ttft": 0.2103110373080038, "mean_tpot": 0.05238419368556628, "p99_tpot": 0.07112881704980786, "p99_latency": 54.633997522417204, "goodput_rps": 1.666402662586717, "throughput_rps": 1.666402662586717, "tokens_per_s": 374.26848334143466, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 0, "n_reconfigs": 2},
+    "h100_dynamic": {"policy": "dynamic", "fleet": "h100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 166.87894681890887, "energy_j": 97642.93886855432, "mean_ttft": 0.6203282103808989, "p99_ttft": 8.664502904425268, "mean_tpot": 0.07334902176775587, "p99_tpot": 0.22871790039893541, "p99_latency": 60.0316469897557, "goodput_rps": 1.71980951145049, "throughput_rps": 1.7977102907147982, "tokens_per_s": 403.7597389269079, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 4, "n_reconfigs": 6},
+    "h100_dynamic+pred": {"policy": "dynamic+pred", "fleet": "h100-0", "n_requests": 300, "n_completed": 300, "n_dropped": 0, "makespan": 166.87894681890887, "energy_j": 97642.93886855432, "mean_ttft": 0.6203282103808989, "p99_ttft": 8.664502904425268, "mean_tpot": 0.07334902176775587, "p99_tpot": 0.22871790039893541, "p99_latency": 60.0316469897557, "goodput_rps": 1.71980951145049, "throughput_rps": 1.7977102907147982, "tokens_per_s": 403.7597389269079, "n_oom": 0, "n_early_restarts": 0, "n_preemptions": 0, "n_scaleups": 4, "n_reconfigs": 6},
+}
+
+_BENCH_SERVING_CFG = {
+    "full": dict(policy="full"),
+    "static": dict(policy="static", n_engines=2),
+    "dynamic": dict(policy="dynamic", n_engines=2, use_prediction=False,
+                    gauge="queue_ticks"),
+    "dynamic+pred": dict(policy="dynamic", n_engines=2, use_prediction=True,
+                         gauge="queue_ticks"),
+}
+
+
+@pytest.mark.parametrize("case", list(BENCH_SERVING_GOLDEN), ids=str)
+def test_queue_tick_gauge_reproduces_pre_slo_metrics(case):
+    import dataclasses
+
+    from repro.serving.sim import (ServingConfig, poisson_requests,
+                                   run_serving)
+    device, policy = case.split("_", 1)
+    metrics = run_serving([device], ServingConfig(**_BENCH_SERVING_CFG[policy]),
+                          poisson_requests(300, rate_per_s=2.0, seed=11))
+    golden = BENCH_SERVING_GOLDEN[case]
+    for field, want in dataclasses.asdict(metrics).items():
+        assert golden[field] == want, (
+            f"bench-serving/{case}: {field} drifted from the pre-SLO "
+            f"threshold engine: {want!r} != {golden[field]!r}")
+
+
+def test_fixed_threshold_growth_ladder_is_deleted():
+    """The SLO refactor deletes the hard-coded queue-tick branch from the
+    engine step: growth decisions flow through the gauge + cost-model
+    trade only (the threshold survives solely as QueueTickGauge data)."""
+    import inspect
+
+    from repro.serving.sim import EngineSim
+
+    src = inspect.getsource(EngineSim.step)
+    assert "scale_up_queue_ticks" not in src
+    assert "_pressure_ticks" not in src
+    assert "gauge" in src
+    assert not hasattr(EngineSim, "_pressure_ticks")
+    grow = inspect.getsource(EngineSim._begin_migration)
+    assert "slo_violation_prob" in grow and "allow_stay" in grow
 
 
 @pytest.mark.parametrize("router", list(FLEET_GOLDEN), ids=str)

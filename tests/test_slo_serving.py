@@ -1,0 +1,445 @@
+"""SLO-aware serving growth: the gauges, the cost-model trade tier, the
+planner's stay candidate / relief scaling, and the end-to-end policy.
+
+The refactor's bit-for-bit side is pinned in tests/test_kernel_parity.py
+(queue-tick gauge emulation vs pre-SLO goldens); this module tests the
+*new* behaviour — predicted p99-miss probability traded against a
+reconfiguration — at every layer it touches.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.memory.timeseries import PeakMemoryPredictor, Prediction
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.partition_manager import PartitionManager
+from repro.core.planner import (SERVING_GROW_COST, CostModel, CostTerms,
+                                Grow, PartitionPlanner, Wait, grow_request,
+                                serving_grow_cost)
+from repro.serving.slo import (PredictiveSLOGauge, QueueTickGauge,
+                               RISK_RAMP_START, _ramp, make_gauge)
+from repro.serving.sim import (LLMServingModel, ServingConfig,
+                               ServingRequest, poisson_requests,
+                               run_serving)
+
+GB = 1024 ** 3
+
+
+# ---------------------------------------------------------------------------
+# Cost model: grouped trade tiers
+# ---------------------------------------------------------------------------
+
+class TestCostModelTiers:
+    def test_grouped_tier_sums_weighted_features(self):
+        model = CostModel("trade", (
+            (("slo_violation_prob", 10.0), ("reconfig_s", 1.0)),
+            ("ladder_rank", 1.0),
+        ))
+        terms = CostTerms(slo_violation_prob=0.5, reconfig_s=2.0,
+                          ladder_rank=3.0)
+        assert model.cost(terms) == (0.5 * 10.0 + 2.0, 3.0)
+
+    def test_single_feature_tiers_unchanged(self):
+        model = CostModel("plain", (("reconfig_s", 1.0), ("reach", -1.0)))
+        terms = CostTerms(reconfig_s=1.5, reach=7.0)
+        assert model.cost(terms) == (1.5, -7.0)
+
+    def test_explain_labels_grouped_tier(self):
+        out = SERVING_GROW_COST.explain(
+            CostTerms(slo_violation_prob=1.0, reconfig_s=0.3))
+        assert "slo_violation_prob+reconfig_s" in out
+
+    def test_trade_crossover_at_reconfig_over_penalty(self):
+        """Grow beats stay exactly when the expected miss seconds outweigh
+        the reconfiguration: prob * penalty > reconfig_s (full relief)."""
+        model = serving_grow_cost(miss_penalty_s=10.0)
+        stay = CostTerms(slo_violation_prob=0.25, ladder_rank=-1.0)
+        grow_cheap = CostTerms(reconfig_s=2.0)    # 0.25*10 > 2.0 -> grow
+        grow_dear = CostTerms(reconfig_s=3.0)     # 0.25*10 < 3.0 -> stay
+        assert model.cost(grow_cheap) < model.cost(stay)
+        assert model.cost(stay) < model.cost(grow_dear)
+
+
+# ---------------------------------------------------------------------------
+# Planner: stay candidate, relief scaling, reach_delta
+# ---------------------------------------------------------------------------
+
+def _grown_engine_pm(backend):
+    """A pm with one busy engine slice on the smallest profile."""
+    pm = PartitionManager(backend)
+    part = pm.allocate(backend.profiles[0])
+    part.busy = True
+    return pm, part
+
+
+class TestPlannerPressureTrade:
+    def test_zero_pressure_stays_put(self):
+        backend = MigA100Backend()
+        pm, part = _grown_engine_pm(backend)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        state, reconfigs = pm.state, pm.n_reconfigs
+        result = planner.place(grow_request(
+            backend, part, None, 0.5, reconfig_cost_s=0.3,
+            slo_violation_prob=0.0, allow_stay=True))
+        assert isinstance(result.action, Wait)
+        assert result.partition is part
+        assert pm.state == state and pm.n_reconfigs == reconfigs
+
+    def test_certain_miss_buys_growth(self):
+        backend = MigA100Backend()
+        pm, part = _grown_engine_pm(backend)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        result = planner.place(grow_request(
+            backend, part, None, 0.5, reconfig_cost_s=0.3,
+            slo_violation_prob=1.0, slo_relief=0.0, allow_stay=True))
+        assert isinstance(result.action, Grow)
+        assert result.partition is not part
+        assert result.partition.profile.mem_gb > part.profile.mem_gb
+
+    def test_stay_wins_ties_at_zero_cost(self):
+        """Zero pressure + zero reconfig cost must not buy a gratuitous
+        reconfiguration: the stay candidate's ladder_rank=-1 wins the tie."""
+        backend = MigA100Backend()
+        pm, part = _grown_engine_pm(backend)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        result = planner.place(grow_request(
+            backend, part, None, 0.5, reconfig_cost_s=0.0,
+            slo_violation_prob=0.0, allow_stay=True))
+        assert isinstance(result.action, Wait)
+
+    def test_needed_compute_picks_smallest_sufficient_rung(self):
+        """With a forecast compute need, every rung at/above it relieves
+        fully, so the memory-tight sufficient rung wins — not the biggest
+        slice (h100: 2g.20gb at 2/7, not 7g.80gb)."""
+        backend = MigH100Backend()
+        pm, part = _grown_engine_pm(backend)        # 1g.10gb, c=1/7
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        result = planner.place(grow_request(
+            backend, part, None, 0.0, reconfig_cost_s=0.3,
+            slo_violation_prob=0.8, needed_compute=0.25, allow_stay=True))
+        assert isinstance(result.action, Grow)
+        assert result.partition.profile.name == "2g.20gb"
+
+    def test_relief_defaults_to_compute_ratio(self):
+        """Without a forecast need, residual pressure scales with the
+        compute ratio — the trade tier then prefers more compute when the
+        probability is high enough to dominate the shared reconfig cost."""
+        backend = MigA100Backend()
+        pm, part = _grown_engine_pm(backend)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        plan = planner.plan(grow_request(
+            backend, part, None, 0.0, reconfig_cost_s=0.3,
+            slo_violation_prob=1.0, allow_stay=True))
+        by_profile = {c.action.placement.profile.name: c
+                      for c in plan.candidates
+                      if not isinstance(c.action, Wait)}
+        small = by_profile["2g.10gb"].terms.slo_violation_prob
+        big = by_profile["7g.40gb"].terms.slo_violation_prob
+        assert big < small < 1.0
+
+    def test_reach_delta_is_graph_reach_change(self):
+        backend = MigA100Backend()
+        pm, part = _grown_engine_pm(backend)
+        planner = PartitionPlanner(pm, SERVING_GROW_COST)
+        live = pm.reach(pm.state)
+        plan = planner.plan(grow_request(backend, part, None, 0.5))
+        for cand in plan.candidates:
+            assert cand.terms.reach_delta == cand.terms.reach - live
+
+
+# ---------------------------------------------------------------------------
+# Gauges
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FakeEngine:
+    cfg: ServingConfig
+    model: LLMServingModel
+    compute: float
+    running: list
+    waiting: list
+    part_bytes: float = 10 * GB
+    last_prediction: Prediction | None = None
+    predictor: PeakMemoryPredictor = dataclasses.field(
+        default_factory=lambda: PeakMemoryPredictor(max_iter=96))
+
+
+def _req(rid, arrival, prompt=256, decode=160, generated=0):
+    r = ServingRequest(rid=rid, arrival=arrival, prompt_tokens=prompt,
+                       decode_tokens=decode)
+    r.generated = generated
+    r.in_prefill = False
+    return r
+
+
+class TestQueueTickGauge:
+    def _engine(self, waiting):
+        return FakeEngine(cfg=ServingConfig(), model=LLMServingModel(),
+                          compute=0.5, running=[], waiting=waiting)
+
+    def test_counts_consecutive_pressured_ticks(self):
+        gauge = QueueTickGauge(3)
+        eng = self._engine([_req(0, 0.0)])
+        assert gauge.observe(eng, 1.0).violation_prob == 0.0
+        assert gauge.observe(eng, 2.0).violation_prob == 0.0
+        assert gauge.observe(eng, 3.0).violation_prob == 1.0
+
+    def test_empty_queue_resets_count(self):
+        gauge = QueueTickGauge(2)
+        busy, idle = self._engine([_req(0, 0.0)]), self._engine([])
+        gauge.observe(busy, 1.0)
+        gauge.observe(idle, 2.0)          # streak broken
+        assert gauge.observe(busy, 3.0).violation_prob == 0.0
+        assert gauge.observe(busy, 4.0).violation_prob == 1.0
+
+    def test_attempt_and_reset_zero_the_streak(self):
+        eng = self._engine([_req(0, 0.0)])
+        for zero in (QueueTickGauge.attempt, QueueTickGauge.reset):
+            gauge = QueueTickGauge(2)
+            gauge.observe(eng, 1.0)
+            gauge.observe(eng, 2.0)
+            zero(gauge)
+            assert gauge.observe(eng, 3.0).violation_prob == 0.0
+
+    def test_threshold_zero_never_fires(self):
+        gauge = QueueTickGauge(0)
+        eng = self._engine([_req(0, 0.0)])
+        for t in range(1, 50):
+            assert gauge.observe(eng, float(t)).violation_prob == 0.0
+
+    def test_emulation_semantics_full_relief_legacy_need(self):
+        gauge = QueueTickGauge(20)
+        assert gauge.relief == 0.0
+        assert gauge.use_predicted_need is False
+        assert gauge.trade_rebuild_cost is False
+
+
+class TestPredictiveGauge:
+    def _gauge(self):
+        return PredictiveSLOGauge(slo_ttft_s=6.0, slo_tpot_s=0.30)
+
+    def test_idle_engine_has_zero_pressure(self):
+        eng = FakeEngine(cfg=ServingConfig(), model=LLMServingModel(),
+                         compute=0.5, running=[], waiting=[])
+        p = self._gauge().observe(eng, 10.0)
+        assert p.violation_prob == 0.0
+        assert p.needed_compute == pytest.approx(0.5)
+
+    def test_aged_queue_head_raises_ttft_risk(self):
+        model = LLMServingModel()
+        cfg = ServingConfig()
+        # full batch, each sequence nearly done: the drain itself is short,
+        # so the head's elapsed wait is what moves the forecast
+        running = [_req(i, 0.0, generated=150) for i in range(cfg.max_batch)]
+        fresh = FakeEngine(cfg=cfg, model=model, compute=1.0,
+                           running=list(running),
+                           waiting=[_req(99, 9.9)])
+        aged = FakeEngine(cfg=cfg, model=model, compute=1.0,
+                          running=list(running),
+                          waiting=[_req(99, 1.0)])
+        g = self._gauge()
+        assert g.observe(fresh, 10.0).ttft_risk == 0.0
+        assert g.observe(aged, 10.0).ttft_risk == 1.0
+
+    def test_needed_compute_rises_with_pressure(self):
+        model = LLMServingModel()
+        cfg = ServingConfig()
+        running = [_req(i, 0.0, generated=10) for i in range(cfg.max_batch)]
+        eng = FakeEngine(cfg=cfg, model=model, compute=1 / 7,
+                         running=running, waiting=[_req(99, 4.0)])
+        p = self._gauge().observe(eng, 10.0)
+        assert p.ttft_risk > 0.0
+        assert p.needed_compute > 1 / 7
+
+    def test_tpot_risk_tracks_iteration_latency(self):
+        model = LLMServingModel()
+        cfg = ServingConfig()
+        slow = FakeEngine(cfg=cfg, model=model, compute=1 / 7,
+                          running=[_req(i, 0.0, generated=5)
+                                   for i in range(cfg.max_batch)],
+                          waiting=[])
+        fast = FakeEngine(cfg=cfg, model=model, compute=1.0,
+                          running=[_req(0, 0.0, generated=5)], waiting=[])
+        g = self._gauge()
+        assert g.observe(slow, 1.0).tpot_risk > 0.0
+        assert g.observe(fast, 1.0).tpot_risk == 0.0
+
+    def test_arrival_rate_decays_with_silence(self):
+        g = self._gauge()
+        for t in (0.0, 0.5, 1.0, 1.5):
+            g.note_arrival(t)
+        burst = g.arrival_rate(2.0)
+        later = g.arrival_rate(60.0)
+        assert burst > 1.0
+        assert later < 0.1 * burst
+
+    def test_oom_risk_requires_converged_prediction(self):
+        model = LLMServingModel()
+        cfg = ServingConfig(use_prediction=True)
+        pred = Prediction(iteration=10, peak_mem_bytes=50 * GB,
+                          converged=False, trend_slope=1.0, sigma=1e9,
+                          reuse_at_horizon=0.9)
+        eng = FakeEngine(cfg=cfg, model=model, compute=0.5, running=[],
+                         waiting=[], last_prediction=pred)
+        assert self._gauge().observe(eng, 1.0).oom_risk == 0.0
+        eng.last_prediction = dataclasses.replace(pred, converged=True)
+        assert self._gauge().observe(eng, 1.0).oom_risk > 0.5
+
+    def test_ramp_shape(self):
+        assert _ramp(0.0, 6.0) == 0.0
+        assert _ramp(RISK_RAMP_START * 6.0, 6.0) == 0.0
+        assert _ramp(6.0, 6.0) == 1.0
+        assert _ramp(60.0, 6.0) == 1.0
+        mid = 0.5 * (RISK_RAMP_START + 1.0) * 6.0
+        assert _ramp(mid, 6.0) == pytest.approx(0.5)
+
+
+class TestMakeGauge:
+    def test_selects_by_config(self):
+        assert isinstance(make_gauge(ServingConfig(gauge="slo")),
+                          PredictiveSLOGauge)
+        assert isinstance(make_gauge(ServingConfig(gauge="queue_ticks")),
+                          QueueTickGauge)
+
+    def test_zero_ticks_disables_pressure_growth(self):
+        gauge = make_gauge(ServingConfig(gauge="slo",
+                                         scale_up_queue_ticks=0))
+        assert isinstance(gauge, QueueTickGauge)
+        assert gauge.threshold == 0
+
+    def test_unknown_gauge_raises(self):
+        with pytest.raises(ValueError, match="unknown SLO gauge"):
+            make_gauge(ServingConfig(gauge="psychic"))
+
+
+# ---------------------------------------------------------------------------
+# Predictor: graded OOM risk
+# ---------------------------------------------------------------------------
+
+class TestOomRisk:
+    def _pred(self, peak_gb, sigma, reuse=1.0):
+        return Prediction(iteration=20, peak_mem_bytes=peak_gb * GB,
+                          converged=True, trend_slope=0.0,
+                          sigma=sigma * GB, reuse_at_horizon=reuse)
+
+    def test_monotone_in_partition_size(self):
+        p = PeakMemoryPredictor(max_iter=64)
+        pred = self._pred(20.0, sigma=2.0)
+        risks = [p.oom_risk(gb * GB, pred) for gb in (10, 20, 40, 80)]
+        assert risks == sorted(risks, reverse=True)
+        assert risks[0] > 0.99 and risks[-1] < 0.01
+
+    def test_zero_sigma_degenerates_to_threshold(self):
+        p = PeakMemoryPredictor(max_iter=64)
+        pred = self._pred(20.0, sigma=0.0)
+        assert p.oom_risk(19.0 * GB, pred) == 1.0
+        assert p.oom_risk(21.0 * GB, pred) == 0.0
+
+    def test_risk_is_half_at_fit_mean(self):
+        """The reported peak carries the z*sigma*reuse margin; at the
+        partition equal to the stripped mean the tail mass is 1/2."""
+        p = PeakMemoryPredictor(max_iter=64)
+        pred = self._pred(20.0, sigma=1.0, reuse=0.8)
+        mean = pred.peak_mem_bytes - p.z * 1.0 * GB * 0.8
+        assert p.oom_risk(mean, pred) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Live-JAX engine: the priced restart trade
+# ---------------------------------------------------------------------------
+
+class TestServeEngineTrade:
+    def _engine(self, **ecfg_kw):
+        from repro.serving.engine import EngineConfig, ServeEngine
+        eng = object.__new__(ServeEngine)       # decision logic only
+        eng.ecfg = EngineConfig(**ecfg_kw)
+        eng.predictor = PeakMemoryPredictor(max_iter=64)
+        return eng
+
+    def test_priced_trade_fires_on_expected_crash_cost(self):
+        pred = Prediction(iteration=20, peak_mem_bytes=20 * GB,
+                          converged=True, trend_slope=0.0, sigma=2.0 * GB,
+                          reuse_at_horizon=1.0)
+        part = 18.0 * GB    # below the margined peak: risk well under 1
+        binary = self._engine()
+        priced = self._engine(crash_cost_s=30.0, restart_cost_s=0.5)
+        timid = self._engine(crash_cost_s=0.01, restart_cost_s=10.0)
+        assert binary._restart_now(part, pred)      # will_oom: peak > part
+        assert priced._restart_now(part, pred)      # risk * 30 > 0.5
+        assert not timid._restart_now(part, pred)   # risk * 0.01 < 10
+
+    def test_priced_trade_waits_for_convergence(self):
+        pred = Prediction(iteration=3, peak_mem_bytes=50 * GB,
+                          converged=False, trend_slope=0.0, sigma=0.0,
+                          reuse_at_horizon=1.0)
+        priced = self._engine(crash_cost_s=30.0, restart_cost_s=0.5)
+        assert not priced._restart_now(10 * GB, pred)
+
+
+# ---------------------------------------------------------------------------
+# End to end
+# ---------------------------------------------------------------------------
+
+class TestSLOServingEndToEnd:
+    def test_policy_names_carry_the_gauge(self):
+        assert ServingConfig(policy="dynamic").name == "dynamic+slo+pred"
+        assert ServingConfig(policy="dynamic",
+                             gauge="queue_ticks").name == "dynamic+pred"
+        assert ServingConfig(policy="dynamic", use_prediction=False,
+                             gauge="queue_ticks").name == "dynamic"
+        assert ServingConfig(policy="static").name == "static"
+
+    def test_slo_growth_beats_queue_tail_on_h100(self):
+        def reqs():
+            return poisson_requests(200, rate_per_s=2.5, seed=11)
+        slo = run_serving(["h100"], ServingConfig(
+            policy="dynamic", n_engines=2, gauge="slo"), reqs())
+        queue = run_serving(["h100"], ServingConfig(
+            policy="dynamic", n_engines=2, use_prediction=False,
+            gauge="queue_ticks"), reqs())
+        assert slo.n_completed == queue.n_completed == 200
+        assert slo.p99_ttft <= slo.p99_tpot * 1e9   # sanity: finite
+        assert slo.p99_ttft < queue.p99_ttft
+        assert slo.n_scaleups >= 1
+
+    def test_zero_ticks_disables_pressure_growth_end_to_end(self):
+        m = run_serving(["a100"], ServingConfig(
+            policy="dynamic", n_engines=2, use_prediction=False,
+            scale_up_queue_ticks=0),
+            poisson_requests(150, rate_per_s=2.5, seed=11))
+        assert m.n_scaleups == 0
+
+    def test_seeded_determinism_identical_serving_metrics(self):
+        """Two identically-seeded SLO-aware runs produce bit-identical
+        ServingMetrics — full dataclass equality, mirroring the
+        ClusterMetrics determinism test (EWMA gauges, forecasts and the
+        trade tier must all be free of hidden nondeterminism)."""
+        cfg = ServingConfig(policy="dynamic", n_engines=2, gauge="slo")
+        runs = [run_serving(["a100", "h100"], cfg,
+                            poisson_requests(180, rate_per_s=2.5, seed=29))
+                for _ in range(2)]
+        assert dataclasses.asdict(runs[0]) == dataclasses.asdict(runs[1])
+
+    def test_miss_penalty_scales_growth_appetite(self):
+        """A near-zero miss penalty makes the stay candidate win every
+        pressure trade: no scale-ups; the default penalty grows."""
+        def reqs():
+            return poisson_requests(200, rate_per_s=2.5, seed=11)
+        eager = run_serving(["h100"], ServingConfig(
+            policy="dynamic", n_engines=2, gauge="slo"), reqs())
+        never = run_serving(["h100"], ServingConfig(
+            policy="dynamic", n_engines=2, gauge="slo",
+            slo_miss_penalty_s=1e-9), reqs())
+        assert eager.n_scaleups >= 1
+        assert never.n_scaleups == 0
+        assert never.p99_ttft >= eager.p99_ttft
+
+    def test_pressure_metrics_stay_consistent(self):
+        m = run_serving(["a100"], ServingConfig(
+            policy="dynamic", n_engines=2, gauge="slo"),
+            poisson_requests(150, rate_per_s=2.5, seed=11))
+        assert m.n_completed + m.n_dropped == 150
+        assert m.goodput_rps <= m.throughput_rps + 1e-12
+        assert m.n_reconfigs >= 2 + m.n_scaleups  # engine carves + grows
