@@ -1,0 +1,95 @@
+"""Observability overhead guard: traced serving runs must stay cheap.
+
+The flight recorder (``repro.obs``) is only worth shipping if leaving it
+on does not distort the numbers it records.  This bench runs the SLO
+serving configuration twice per repeat — ``tracer=None`` and with a live
+:class:`~repro.obs.trace.Tracer` — interleaved so machine drift hits both
+arms equally, takes the min over repeats, and **hard-asserts the traced
+wall-clock stays within ``MAX_OVERHEAD_RATIO`` (1.3x) of the untraced
+run**.  The ratio lands in the ``us_per_call`` slot so
+``benchmarks/compare.py`` watches it like any other deterministic metric.
+
+``trace_serving_run`` is also the canonical "give me a real trace"
+helper: ``python -m benchmarks.run --trace out.jsonl`` calls it to write
+the JSONL artifact CI uploads.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.obs import Tracer
+from repro.serving.sim import ServingConfig, poisson_requests, run_serving
+
+N_REQUESTS = 300
+ARRIVAL_RATE = 2.5
+SEED = 11
+DEVICE = "a100"
+REPEATS = 3
+MAX_OVERHEAD_RATIO = 1.3
+
+#: the SLO-aware growth arm — the config with the richest trace (request
+#: spans, reconfig windows, planner audits, per-tick counters), so the
+#: overhead bound is measured where tracing costs the most
+CONFIG = ServingConfig(policy="dynamic", n_engines=2, use_prediction=True,
+                       gauge="slo")
+
+
+def _requests():
+    return poisson_requests(N_REQUESTS, rate_per_s=ARRIVAL_RATE, seed=SEED)
+
+
+def trace_serving_run(path: str | None = None) -> Tracer:
+    """One traced SLO serving run; optionally write the JSONL to ``path``.
+
+    This is the run behind ``python -m benchmarks.run --trace out.jsonl``:
+    its trace carries per-engine request/reconfig spans, planner decision
+    audits with full CostTerms vectors, and streaming counters.
+    """
+    tracer = Tracer(meta={"bench": "serving_slo", "device": DEVICE,
+                          "n_requests": N_REQUESTS,
+                          "rate_per_s": ARRIVAL_RATE, "seed": SEED})
+    run_serving([DEVICE], CONFIG, _requests(), tracer=tracer)
+    if path is not None:
+        n = tracer.write_jsonl(path)
+        print(f"wrote {n} trace records to {path}")
+    return tracer
+
+
+def run(csv_rows: list) -> dict:
+    print(f"\n=== obs overhead: traced vs untraced serving "
+          f"({N_REQUESTS} reqs @ {ARRIVAL_RATE}/s, {DEVICE}, "
+          f"min of {REPEATS}) ===")
+    plain_s = float("inf")
+    traced_s = float("inf")
+    n_records = 0
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run_serving([DEVICE], CONFIG, _requests())
+        plain_s = min(plain_s, time.perf_counter() - t0)
+
+        tracer = Tracer(meta={"bench": "serving_slo"})
+        t0 = time.perf_counter()
+        run_serving([DEVICE], CONFIG, _requests(), tracer=tracer)
+        traced_s = min(traced_s, time.perf_counter() - t0)
+        n_records = len(tracer.records)
+
+    ratio = traced_s / plain_s
+    print(f"{'untraced':<10} {plain_s * 1e3:8.1f} ms")
+    print(f"{'traced':<10} {traced_s * 1e3:8.1f} ms   "
+          f"({n_records} records)")
+    print(f"{'overhead':<10} {ratio:8.3f}x   (bound {MAX_OVERHEAD_RATIO}x)")
+    assert ratio <= MAX_OVERHEAD_RATIO, (
+        f"tracing overhead {ratio:.3f}x exceeds the "
+        f"{MAX_OVERHEAD_RATIO}x bound — the flight recorder must stay "
+        f"cheap enough to leave on")
+    csv_rows.append(("obs.trace_overhead_ratio", ratio,
+                     f"traced {traced_s * 1e3:.0f}ms / "
+                     f"plain {plain_s * 1e3:.0f}ms"))
+    return {"untraced_s": plain_s, "traced_s": traced_s,
+            "overhead_ratio": ratio, "n_trace_records": n_records,
+            "max_overhead_ratio": MAX_OVERHEAD_RATIO}
+
+
+if __name__ == "__main__":
+    run([])

@@ -61,6 +61,12 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
         ("slo.h100.slo.energy_kj", "lower"),
         ("slo.h100.slo.goodput_rps", "higher"),
     ],
+    # the overhead ratio is traced/untraced wall-clock on the same machine
+    # in the same process — runner-speed cancels out, so unlike raw
+    # microseconds it is stable enough to watch
+    "obs": [
+        ("obs.trace_overhead_ratio", "lower"),
+    ],
 }
 
 

@@ -17,7 +17,7 @@ import subprocess
 import sys
 
 from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
-                        bench_fig4_ml, bench_fleet, bench_kernels,
+                        bench_fig4_ml, bench_fleet, bench_kernels, bench_obs,
                         bench_planner, bench_predictor, bench_reachability,
                         bench_roofline, bench_serving, bench_slo,
                         bench_tpu_pod)
@@ -40,6 +40,7 @@ BENCHES = {
     "serving": bench_serving.run,             # request-level LLM serving SLOs
     "slo": bench_slo.run,                     # SLO-aware vs reactive growth
     "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
+    "obs": bench_obs.run,                     # flight-recorder overhead bound
 }
 
 
@@ -79,6 +80,10 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--outdir", default=".",
                     help="where BENCH_<name>.json files land")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="also record one traced SLO serving run and write "
+                         "its flight-recorder JSONL here (inspect with "
+                         "'python -m repro.obs.report OUT.jsonl')")
     args = ap.parse_args()
     outdir = pathlib.Path(args.outdir)
     # --outdir may name a directory that does not exist yet (CI passes
@@ -98,6 +103,8 @@ def main() -> None:
             print(f"\n!! bench {name} failed: {e!r}")
             continue
         _write_json(outdir, name, rows[rows_before:], extra, sha)
+    if args.trace:
+        bench_obs.trace_serving_run(args.trace)
     print("\n=== CSV ===")
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -18,12 +18,15 @@ different energy zones, step by step:
   4. compare single-zone / price-greedy / follow-the-sun on dollars, and
      watch a checkpointed OOM restart migrate across zones.
 
-    PYTHONPATH=src python examples/cluster_sim.py
+    PYTHONPATH=src python examples/cluster_sim.py [--trace out.jsonl]
 """
+
+import argparse
 
 from repro.cluster import (ZoneTariff, cluster_workload, make_zone,
                            make_zone_router, run_cluster)
 from repro.core.scheduler.job import Job
+from repro.obs import Tracer
 
 PERIOD_S = 600.0  # one compressed "day"
 
@@ -53,11 +56,21 @@ def build_workload(zones):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="record the follow_the_sun arm's flight-recorder "
+                         "trace (summarize with python -m repro.obs.report)")
+    args = ap.parse_args()
     for policy in ("single_zone", "price_greedy", "follow_the_sun"):
         zones = build_zones()
         jobs, origin = build_workload(zones)
+        tracer = (Tracer() if args.trace and policy == "follow_the_sun"
+                  else None)
         metrics = run_cluster(zones, make_zone_router(policy), jobs,
-                              origin=origin)
+                              origin=origin, tracer=tracer)
+        if tracer is not None:
+            n = tracer.write_jsonl(args.trace)
+            print(f"wrote {n} trace records to {args.trace}")
         print(f"\n== {policy} ==")
         print(metrics.summary())
         for zone in metrics.per_zone:

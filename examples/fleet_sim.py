@@ -18,13 +18,16 @@ scale, step by step:
      arrival forecast needs are queued (never dropped) until capacity or
      the forecast relents.
 
-    PYTHONPATH=src python examples/fleet_sim.py
+    PYTHONPATH=src python examples/fleet_sim.py [--trace out.jsonl]
 """
+
+import argparse
 
 from repro.core.scheduler.job import Job, rodinia_job
 from repro.fleet import (AdmissionController, jobs_from_trace, make_fleet,
                          make_router, poisson_arrivals, run_fleet,
                          synthetic_alibaba_rows)
+from repro.obs import Tracer
 
 
 def build_workload():
@@ -46,9 +49,19 @@ def build_workload():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="record the energy_aware arm's flight-recorder "
+                         "trace (summarize with python -m repro.obs.report)")
+    args = ap.parse_args()
     for policy in ("round_robin", "energy_aware"):
         fleet = make_fleet(["a100", "a100", "h100"])
-        metrics = run_fleet(fleet, make_router(policy), build_workload())
+        tracer = Tracer() if args.trace and policy == "energy_aware" else None
+        metrics = run_fleet(fleet, make_router(policy), build_workload(),
+                            tracer=tracer)
+        if tracer is not None:
+            n = tracer.write_jsonl(args.trace)
+            print(f"wrote {n} trace records to {args.trace}")
         print(f"\n== {policy} ==")
         print(metrics.summary())
         for dev in metrics.per_device:

@@ -1,6 +1,6 @@
 """Request-level LLM serving on MIG slices — quickstart.
 
-    PYTHONPATH=src python examples/serving_sim.py
+    PYTHONPATH=src python examples/serving_sim.py [--trace out.jsonl]
 
 Simulates Poisson LLM request traffic into continuous-batching engines on
 MIG partitions and compares the serving policies: one monolithic engine
@@ -9,13 +9,22 @@ MIG partitions and compares the serving policies: one monolithic engine
 `gauge="slo"`: growth happens when the forecast p99-miss probability
 outweighs the reconfiguration, sized to the predictor's KV trajectory).
 Reports serving SLO metrics — TTFT, TPOT, p99 latency, goodput — plus the
-energy integral.
+energy integral.  With ``--trace out.jsonl`` the SLO-aware arm records a
+flight-recorder trace (summarize with ``python -m repro.obs.report``).
 """
 
+import argparse
+
+from repro.obs import Tracer
 from repro.serving.sim import (ServingConfig, poisson_requests, run_serving)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="record the SLO-aware arm's flight-recorder trace")
+    args = ap.parse_args()
+
     def make_requests():
         return poisson_requests(300, rate_per_s=2.5, seed=11)
 
@@ -26,7 +35,13 @@ def main() -> None:
                               use_prediction=False, gauge="queue_ticks"),
                 ServingConfig(policy="dynamic", n_engines=2,
                               use_prediction=True, gauge="slo")):
-        print(" ", run_serving(["a100"], cfg, make_requests()).summary())
+        slo_arm = cfg.policy == "dynamic" and cfg.use_prediction
+        tracer = Tracer() if args.trace and slo_arm else None
+        m = run_serving(["a100"], cfg, make_requests(), tracer=tracer)
+        print(" ", m.summary())
+        if tracer is not None:
+            n = tracer.write_jsonl(args.trace)
+            print(f"  wrote {n} trace records to {args.trace}")
 
     print("\n== heterogeneous fleet: A100 + H100, dynamic slices ==")
     m = run_serving(["a100", "h100"],

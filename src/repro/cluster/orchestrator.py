@@ -37,6 +37,7 @@ from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import PricedEnergyIntegrator
 from repro.fleet.orchestrator import FleetPolicy, drain_queue, gate_idle_devices
 from repro.fleet.router import CostRouter
+from repro.obs.counters import TailStats
 
 
 class ClusterPolicy(SchedulingPolicy):
@@ -69,6 +70,7 @@ class ClusterPolicy(SchedulingPolicy):
         self.n_cross_zone_migrations = 0
         self.data_movement_s_total = 0.0
         self.migrations: list[str] = []
+        self.jct_tail = TailStats("jct_s")
 
     # -- dispatch ----------------------------------------------------------
 
@@ -103,6 +105,11 @@ class ClusterPolicy(SchedulingPolicy):
                 self.n_cross_zone_migrations += 1
                 self._fleets[prev].forget(job.name)
                 self.migrations.append(action.describe())
+                if kernel.tracer is not None:
+                    kernel.tracer.instant(
+                        "migrate.xzone", device=dev.name, lane="router",
+                        cat="migrate", job=job.name, source_zone=prev,
+                        target_zone=zone.name, data_movement_s=move_s)
             self.data_movement_s_total += move_s
             self._last_zone[job.name] = zone.name
             return True
@@ -126,6 +133,8 @@ class ClusterPolicy(SchedulingPolicy):
         if run.plan.outcome in (OOM, EARLY_RESTART):
             run.job.est_mem_gb = run.plan.new_est_mem_gb
             kernel.queue.insert(0, run.job)  # restart: earliest arrival
+        else:
+            self.jct_tail.observe(run.t_end - run.job.arrival)
 
     def on_stall(self, kernel: EventKernel) -> None:
         if kernel.has_events():
@@ -180,6 +189,8 @@ class ClusterPolicy(SchedulingPolicy):
             data_movement_s=self.data_movement_s_total,
             per_zone=per_zone,
             migrations=self.migrations,
+            p99_jct=(self.jct_tail.percentile(99)
+                     if self.jct_tail.count else 0.0),
         )
 
 
@@ -198,13 +209,16 @@ class ClusterOrchestrator:
         self.wake_latency_s = wake_latency_s
 
     def run(
-        self, jobs: Iterable[Job], origin: Mapping[str, str] | None = None
+        self,
+        jobs: Iterable[Job],
+        origin: Mapping[str, str] | None = None,
+        tracer=None,
     ) -> ClusterMetrics:
         policy = ClusterPolicy(
             self.zones, self.router, self.wake_latency_s, origin=origin
         )
         devices = [d for z in self.zones for d in z.devices]
-        return EventKernel(devices, policy).run(jobs)
+        return EventKernel(devices, policy, tracer=tracer).run(jobs)
 
 
 def run_cluster(
@@ -213,7 +227,8 @@ def run_cluster(
     jobs: Iterable[Job],
     origin: Mapping[str, str] | None = None,
     wake_latency_s: float = WAKE_LATENCY_S,
+    tracer=None,
 ) -> ClusterMetrics:
     """One-shot convenience wrapper."""
     orch = ClusterOrchestrator(zones, router, wake_latency_s=wake_latency_s)
-    return orch.run(jobs, origin=origin)
+    return orch.run(jobs, origin=origin, tracer=tracer)

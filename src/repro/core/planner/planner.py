@@ -111,6 +111,12 @@ class PlanResult:
 class PartitionPlanner:
     """Plan/execute partition actions against one PartitionManager."""
 
+    #: flight recorder (repro.obs.Tracer) + the device name it files
+    #: records under; set by the event kernel when a run is traced, left
+    #: at the class defaults (no-op) otherwise
+    tracer = None
+    owner = ""
+
     def __init__(self, pm: PartitionManager,
                  cost_model: CostModel) -> None:
         self.pm = pm
@@ -191,8 +197,14 @@ class PartitionPlanner:
                                         terms=terms, cost=model.cost(terms)))
 
         chosen = min(candidates, key=lambda c: c.cost) if candidates else None
-        return Plan(request=request, model=model, candidates=candidates,
+        plan = Plan(request=request, model=model, candidates=candidates,
                     chosen=chosen)
+        if self.tracer is not None:
+            # imported lazily: repro.obs.audit imports this module
+            from repro.obs.audit import plan_audit_record
+            self.tracer.audit(plan_audit_record(
+                plan, t=self.tracer.now(), device=self.owner))
+        return plan
 
     @staticmethod
     def _relief(request: PlanRequest, profile: PartitionProfile) -> float:
@@ -262,6 +274,13 @@ class PartitionPlanner:
                 pm.release(p)
             part = pm._commit(action.placement)
             pm.n_reconfigs += len(action.consumed)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "partition." + ("reshape" if isinstance(
+                    action, ReshapeFuseFission) else "create"),
+                device=self.owner, lane="planner", cat="partition",
+                profile=part.profile.name, pid=part.pid,
+                action=plan.action.describe())
         return PlanResult(partition=part, setup_s=request.reconfig_cost_s,
                           action=plan.action)
 

@@ -24,6 +24,7 @@ from repro.core.scheduler.energy import DevicePowerModel, EnergyIntegrator
 from repro.core.scheduler.job import GB, Job
 from repro.core.scheduler.metrics import Metrics, RunRecord
 from repro.core.memory.timeseries import PeakMemoryPredictor
+from repro.obs.counters import TailStats
 
 DONE = "done"
 OOM = "oom"
@@ -137,6 +138,10 @@ class DeviceSim:
     clock, behind one global admission queue.
     """
 
+    #: flight recorder (repro.obs.Tracer); instance-assigned by the event
+    #: kernel when a run is traced, class-default None otherwise
+    tracer = None
+
     def __init__(self, backend: PartitionBackend, power: DevicePowerModel,
                  use_prediction: bool = True, policy: str = "",
                  name: str = "dev0",
@@ -158,6 +163,7 @@ class DeviceSim:
         self.n_oom = 0
         self.n_early = 0
         self.wasted = 0.0
+        self.turnaround_tail = TailStats("turnaround_s")
         self._mem_integral = 0.0
         self._live_mem_gb = 0.0
 
@@ -229,11 +235,21 @@ class DeviceSim:
         if run.plan.outcome == OOM:
             self.n_oom += 1
             self.wasted += run.plan.wasted_seconds
+            if self.tracer is not None:
+                self.tracer.instant("oom", t=run.t_end, device=self.name,
+                                    job=run.job.name,
+                                    profile=run.partition.profile.name)
         elif run.plan.outcome == EARLY_RESTART:
             self.n_early += 1
             self.wasted += run.plan.wasted_seconds
+            if self.tracer is not None:
+                self.tracer.instant("early_restart", t=run.t_end,
+                                    device=self.name, job=run.job.name,
+                                    profile=run.partition.profile.name)
         else:
             self.finished[run.job.name] = run.t_end
+            self.turnaround_tail.observe(
+                run.t_end - self.arrivals[run.job.name])
         return run
 
     @property
@@ -261,10 +277,17 @@ class DeviceSim:
             raise ValueError(f"{self.name}: cannot gate with running jobs")
         self._advance_time(self.t)
         self.energy.set_gated(True)
+        if self.tracer is not None:
+            self.tracer.instant("power.gate", t=self.t, device=self.name,
+                                cat="power")
 
     def ungate(self) -> None:
+        was_gated = self.energy.gated
         self._advance_time(self.t)
         self.energy.set_gated(False)
+        if was_gated and self.tracer is not None:
+            self.tracer.instant("power.ungate", t=self.t, device=self.name,
+                                cat="power")
 
     # -- placement (scheme B's step, reusable by the fleet router) ---------
 
@@ -315,4 +338,6 @@ class DeviceSim:
                              / max(len(self.finished), 1)),
             n_oom=self.n_oom, n_early_restarts=self.n_early,
             n_reconfigs=self.pm.n_reconfigs, wasted_seconds=self.wasted,
-            records=self.records)
+            records=self.records,
+            p99_turnaround=(self.turnaround_tail.percentile(99)
+                            if self.turnaround_tail.count else 0.0))

@@ -111,7 +111,8 @@ class EventKernel:
     lighter device type and drives everything through ticks + reconfigs.
     """
 
-    def __init__(self, devices: Sequence, policy: SchedulingPolicy) -> None:
+    def __init__(self, devices: Sequence, policy: SchedulingPolicy,
+                 tracer=None) -> None:
         if not devices:
             raise ValueError("the kernel needs at least one device")
         names = [d.name for d in devices]
@@ -124,6 +125,17 @@ class EventKernel:
         self._seq = itertools.count()
         self._dev_index = {id(d): i for i, d in enumerate(self.devices)}
         self.queue: list = []   # admitted, not yet placed
+        self.tracer = tracer    # repro.obs.Tracer flight recorder, or None
+        if tracer is not None:
+            tracer.bind_clock(lambda: self.t)
+            tracer.meta.setdefault("policy", policy.name)
+            tracer.meta.setdefault("devices", names)
+            for dev in self.devices:
+                dev.tracer = tracer
+                planner = getattr(dev, "planner", None)
+                if planner is not None:
+                    planner.tracer = tracer
+                    planner.owner = dev.name
 
     # -- event plumbing ----------------------------------------------------
 
@@ -154,6 +166,13 @@ class EventKernel:
         run = device.start(job, partition, setup_s=setup_s)
         self.push(run.t_end, FINISH, device,
                   sub=self._dev_index[id(device)], seq=run.seq)
+        if self.tracer is not None:
+            profile = partition.profile
+            self.tracer.span(
+                run.t_start, run.t_end, job.name, device=device.name,
+                lane=f"{profile.name}#{partition.pid}", cat="run",
+                outcome=run.plan.outcome, profile=profile.name,
+                mem_gb=job.mem_gb, setup_s=setup_s)
         return run
 
     # -- the loop ----------------------------------------------------------
@@ -198,6 +217,7 @@ class EventKernel:
                 self.policy.on_finish(self, ev.payload, run)
             elif ev.kind == ARRIVAL:
                 self._advance_all()
+                self._trace_queued(ev.payload)
                 self.policy.on_arrival(self, ev.payload)
                 # admit simultaneous arrivals together, as the legacy loops
                 # did (`arrival <= t + eps`): dispatching between two
@@ -205,8 +225,9 @@ class EventKernel:
                 # device for zero seconds and charge a spurious wake
                 while (self._heap and self._heap[0].kind == ARRIVAL
                        and self._heap[0].t <= ev.t + 1e-12):
-                    self.policy.on_arrival(
-                        self, heapq.heappop(self._heap).payload)
+                    tied = heapq.heappop(self._heap).payload
+                    self._trace_queued(tied)
+                    self.policy.on_arrival(self, tied)
             elif ev.kind == RECONFIG:
                 self._advance_all()
                 self.policy.on_reconfig(self, ev.payload)
@@ -214,4 +235,11 @@ class EventKernel:
                 self._advance_all()
                 self.policy.on_tick(self, ev.payload)
 
+        if self.tracer is not None:
+            self.tracer.finish(self.t)
         return self.policy.result(self, jobs)
+
+    def _trace_queued(self, item) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("queued", lane="queue",
+                                job=str(getattr(item, "name", item)))

@@ -43,6 +43,9 @@ class Metrics:
     wasted_seconds: float
     records: list[RunRecord]
     device: str = ""
+    #: streamed P² estimate over completed-job turnarounds (0.0 when no
+    #: job finished); exact mean stays in ``mean_turnaround``
+    p99_turnaround: float = 0.0
 
     @property
     def throughput(self) -> float:
@@ -79,6 +82,7 @@ class FleetMetrics:
     n_migrations: int = 0      # cross-device restarts (planner Migrate)
     n_admission_deferrals: int = 0   # jobs the reach floor held back
     n_admission_overrides: int = 0   # stall-escape admissions past the floor
+    p99_jct: float = 0.0       # streamed P² estimate over completion - arrival
 
     @property
     def throughput(self) -> float:
@@ -143,6 +147,7 @@ class ClusterMetrics:
     data_movement_s: float         # total checkpoint-transfer seconds paid
     per_zone: list[ZoneMetrics]
     migrations: list[str]          # describe() of each cluster-level Migrate
+    p99_jct: float = 0.0           # streamed P² estimate, cluster-wide
 
     @property
     def throughput(self) -> float:

@@ -218,22 +218,22 @@ class SchemeBPolicy(_SingleDevicePolicy):
 # ---------------------------------------------------------------------------
 
 def run_baseline(jobs: Iterable[Job], backend: PartitionBackend,
-                 power: DevicePowerModel) -> Metrics:
+                 power: DevicePowerModel, tracer=None) -> Metrics:
     sim = DeviceSim(backend, power, use_prediction=False, policy="baseline")
-    return EventKernel([sim], BaselinePolicy()).run(jobs)
+    return EventKernel([sim], BaselinePolicy(), tracer=tracer).run(jobs)
 
 
 def run_scheme_a(jobs: Iterable[Job], backend: PartitionBackend,
                  power: DevicePowerModel, use_prediction: bool = True,
-                 work_steal: bool = False) -> Metrics:
+                 work_steal: bool = False, tracer=None) -> Metrics:
     policy = SchemeAPolicy(use_prediction, work_steal)
     sim = DeviceSim(backend, power, use_prediction, policy=policy.name)
-    return EventKernel([sim], policy).run(jobs)
+    return EventKernel([sim], policy, tracer=tracer).run(jobs)
 
 
 def run_scheme_b(jobs: Iterable[Job], backend: PartitionBackend,
-                 power: DevicePowerModel, use_prediction: bool = True
-                 ) -> Metrics:
+                 power: DevicePowerModel, use_prediction: bool = True,
+                 tracer=None) -> Metrics:
     policy = SchemeBPolicy(use_prediction)
     sim = DeviceSim(backend, power, use_prediction, policy=policy.name)
-    return EventKernel([sim], policy).run(jobs)
+    return EventKernel([sim], policy, tracer=tracer).run(jobs)

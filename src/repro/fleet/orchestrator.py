@@ -35,6 +35,7 @@ from repro.core.scheduler.metrics import FleetMetrics
 from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import FleetEnergyIntegrator
 from repro.fleet.router import Router
+from repro.obs.counters import TailStats
 
 
 def drain_queue(kernel: EventKernel,
@@ -84,6 +85,7 @@ class FleetPolicy(SchedulingPolicy):
         self.name = router.name
         self.n_migrations = 0
         self.n_admission_overrides = 0
+        self.jct_tail = TailStats("jct_s")
         self._deferred_names: set[str] = set()
         self._force_admit = False
         self._recheck_tick = None                # live admission-recheck Event
@@ -119,6 +121,11 @@ class FleetPolicy(SchedulingPolicy):
                     # stall escape: this job is placed BELOW the floor —
                     # count every such admission, not each escape round
                     self.n_admission_overrides += 1
+                    if kernel.tracer is not None:
+                        kernel.tracer.instant(
+                            "admission.override", device=dev.name,
+                            lane="admission", cat="admission",
+                            job=job.name, reason=decision.reason)
             result = dev.planner.execute(plan)
             if result is None:      # pragma: no cover - chosen was checked
                 continue
@@ -129,6 +136,10 @@ class FleetPolicy(SchedulingPolicy):
                 # landing on an H100 (paper §4.3 lifted to the fleet)
                 action = Migrate(device=dev.name, inner=action)
                 self.n_migrations += 1
+                if kernel.tracer is not None:
+                    kernel.tracer.instant(
+                        "migrate.device", device=dev.name, lane="router",
+                        cat="migrate", job=job.name, source=prev)
             self._last_device[job.name] = dev.name
             setup = result.setup_s + extra_setup_s
             if dev.gated:
@@ -144,6 +155,9 @@ class FleetPolicy(SchedulingPolicy):
         """Every placeable device failed admission: the job stays queued.
         Schedule an admission tick so the decision is revisited even if no
         finish event arrives first (the forecast decays in the meantime)."""
+        if kernel.tracer is not None:
+            kernel.tracer.instant("admission.defer", lane="admission",
+                                  cat="admission", job=job.name)
         self._deferred_names.add(job.name)
         retry = self.admission.retry_s
         if retry is not None and self._recheck_tick is None:
@@ -187,6 +201,8 @@ class FleetPolicy(SchedulingPolicy):
         if run.plan.outcome in (OOM, EARLY_RESTART):
             run.job.est_mem_gb = run.plan.new_est_mem_gb
             kernel.queue.insert(0, run.job)   # restart: earliest arrival
+        else:
+            self.jct_tail.observe(run.t_end - run.job.arrival)
 
     def on_stall(self, kernel: EventKernel) -> None:
         # an *external* event (arrival, finish, reconfig) may genuinely
@@ -244,7 +260,9 @@ class FleetPolicy(SchedulingPolicy):
             per_device=per_device, records=records,
             n_migrations=self.n_migrations,
             n_admission_deferrals=len(self._deferred_names),
-            n_admission_overrides=self.n_admission_overrides)
+            n_admission_overrides=self.n_admission_overrides,
+            p99_jct=(self.jct_tail.percentile(99)
+                     if self.jct_tail.count else 0.0))
 
 
 class FleetOrchestrator:
@@ -262,17 +280,18 @@ class FleetOrchestrator:
         self.admission = admission
         self.energy = FleetEnergyIntegrator(self.devices)
 
-    def run(self, jobs: Iterable[Job]) -> FleetMetrics:
+    def run(self, jobs: Iterable[Job], tracer=None) -> FleetMetrics:
         policy = FleetPolicy(self.router, self.wake_latency_s, self.energy,
                              admission=self.admission)
-        return EventKernel(self.devices, policy).run(jobs)
+        return EventKernel(self.devices, policy, tracer=tracer).run(jobs)
 
 
 def run_fleet(devices: Sequence[DeviceSim], router: Router,
               jobs: Iterable[Job],
               wake_latency_s: float = WAKE_LATENCY_S,
-              admission: AdmissionController | None = None) -> FleetMetrics:
+              admission: AdmissionController | None = None,
+              tracer=None) -> FleetMetrics:
     """One-shot convenience wrapper."""
     return FleetOrchestrator(devices, router,
                              wake_latency_s=wake_latency_s,
-                             admission=admission).run(jobs)
+                             admission=admission).run(jobs, tracer=tracer)

@@ -1,0 +1,30 @@
+"""Zero-dependency telemetry: flight recorder, planner decision audit,
+streaming counters (ISSUE 6).
+
+* :mod:`repro.obs.trace` — :class:`Tracer` (typed spans / instants /
+  counters / audits), JSONL persistence, Chrome trace_event export for
+  chrome://tracing / Perfetto per-device Gantt rendering.
+* :mod:`repro.obs.audit` — flattens a planner :class:`Plan` into the
+  replayable decision record the regret oracle consumes.
+* :mod:`repro.obs.counters` — :class:`Counter` / :class:`Gauge` /
+  P² streaming quantiles (:class:`P2Quantile`, :class:`TailStats`) and
+  a :class:`MetricsRegistry`.
+* :mod:`repro.obs.report` — ``python -m repro.obs.report trace.jsonl``.
+
+Everything is pay-for-what-you-use: ``tracer=None`` (the default on every
+kernel / orchestrator entry point) takes the exact pre-telemetry code
+path, pinned by the no-op parity tests.
+"""
+
+from repro.obs.audit import deciding_tier, plan_audit_record, tier_labels
+from repro.obs.counters import (Counter, Gauge, MetricsRegistry, P2Quantile,
+                                TailStats)
+from repro.obs.trace import (SCHEMA, SCHEMA_VERSION, Tracer, read_jsonl,
+                             to_chrome_trace, write_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "MetricsRegistry", "P2Quantile", "TailStats",
+    "SCHEMA", "SCHEMA_VERSION", "Tracer", "read_jsonl", "to_chrome_trace",
+    "write_chrome_trace", "deciding_tier", "plan_audit_record",
+    "tier_labels",
+]

@@ -1,0 +1,79 @@
+"""Planner decision audit: every candidate's cost vector, and why one won.
+
+The planner already returns an explainable :class:`~repro.core.planner.
+planner.Plan` — this module flattens it into the plain-dict record shape
+the flight recorder buffers and the future regret oracle (ROADMAP,
+arXiv:2409.06646) replays: for each considered candidate the full
+:class:`~repro.core.planner.cost.CostTerms` feature vector and the
+evaluated lexicographic cost tuple; for the chosen one, the *deciding
+tier* — the first tier of the cost model at which the winner strictly
+beat the best runner-up.  That single index answers "why this action?":
+a Grow that wins at the ``(slo_violation_prob+reconfig_s)`` tier was
+bought by SLO pressure; one that only wins at ``ladder_rank`` merely sat
+higher on the ladder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.planner.cost import CostModel
+from repro.core.planner.planner import Plan
+
+
+def tier_labels(model: CostModel) -> list[str]:
+    """Human label per lexicographic tier (groups join with '+')."""
+    labels = []
+    for tier in model.weights:
+        if isinstance(tier[0], str):
+            labels.append(tier[0])
+        else:
+            labels.append("+".join(f for f, _ in tier))
+    return labels
+
+
+def deciding_tier(plan: Plan) -> int | None:
+    """Index of the first cost tier where the chosen candidate strictly
+    beats the best runner-up; None when there is no chosen candidate, no
+    runner-up, or an exact cost tie (the winner won on stable order)."""
+    if plan.chosen is None or len(plan.candidates) < 2:
+        return None
+    others = [c for c in plan.candidates if c is not plan.chosen]
+    runner_up = min(others, key=lambda c: c.cost)
+    for i, (a, b) in enumerate(zip(plan.chosen.cost, runner_up.cost)):
+        if a != b:
+            return i
+    return None
+
+
+def plan_audit_record(plan: Plan, *, t: float, device: str = "",
+                      owner: str = "") -> dict[str, Any]:
+    """Flatten one plan search into an ``{"type": "audit", ...}`` record."""
+    labels = tier_labels(plan.model)
+    tier = deciding_tier(plan)
+    candidates = []
+    for cand in plan.candidates:
+        candidates.append({
+            "action": cand.action.describe(),
+            "terms": dataclasses.asdict(cand.terms),
+            "cost": list(cand.cost),
+        })
+    chosen_idx = (plan.candidates.index(plan.chosen)
+                  if plan.chosen is not None else None)
+    return {
+        "type": "audit",
+        "t": t,
+        "device": device,
+        "owner": owner,
+        "model": plan.model.name,
+        "tiers": labels,
+        "ladder": [p.name for p in plan.request.ladder],
+        "release": (plan.request.release.profile.name
+                    if plan.request.release is not None else None),
+        "candidates": candidates,
+        "chosen": chosen_idx,
+        "action": plan.action.describe(),
+        "deciding_tier": tier,
+        "deciding_tier_label": labels[tier] if tier is not None else None,
+    }

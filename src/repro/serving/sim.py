@@ -55,6 +55,7 @@ from repro.core.scheduler.job import GB
 from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
 from repro.core.scheduler.metrics import percentile
 from repro.fleet.devices import DEVICE_CATALOGUE
+from repro.obs.counters import TailStats
 from repro.serving.slo import SLOPressure, make_gauge
 
 MB = 1024 ** 2
@@ -204,6 +205,12 @@ class ServingConfig:
     #: seconds-equivalent price of a predicted p99 miss — the exchange
     #: rate of the grow trade (cost.serving_grow_cost)
     slo_miss_penalty_s: float = SLO_MISS_PENALTY_S
+    #: keep full latency sample lists and compute percentiles by sorting
+    #: (the legacy path the golden-parity tests pin); the default streams
+    #: TTFT/TPOT/latency through P² estimators at O(1) memory
+    #: (repro.obs.counters), which is what lets the kernel survive
+    #: trace-scale request counts
+    exact_quantiles: bool = False
 
     @property
     def name(self) -> str:
@@ -216,6 +223,40 @@ class ServingConfig:
 
 
 # ---------------------------------------------------------------------------
+# Streaming request statistics
+# ---------------------------------------------------------------------------
+
+class ServingStats:
+    """Request-completion statistics streamed as the simulation runs.
+
+    Engines feed every completed request in here the moment it finishes,
+    so TTFT/TPOT/latency tails come from P² estimators at O(1) memory
+    instead of end-of-run sorts over stored lists (``exact=True`` keeps
+    the lists — the golden-parity path)."""
+
+    def __init__(self, cfg: "ServingConfig") -> None:
+        exact = cfg.exact_quantiles
+        self.ttft = TailStats("ttft_s", exact=exact)
+        self.tpot = TailStats("tpot_s", exact=exact)
+        self.latency = TailStats("latency_s", exact=exact)
+        self.n_completed = 0
+        self.n_good = 0
+        self.tokens = 0
+        self._slo_ttft = cfg.slo_ttft_s
+        self._slo_tpot = cfg.slo_tpot_s
+
+    def complete(self, req: ServingRequest) -> None:
+        self.n_completed += 1
+        self.tokens += req.generated
+        ttft, tpot = req.ttft, req.tpot
+        self.ttft.observe(ttft)
+        self.tpot.observe(tpot)
+        self.latency.observe(req.latency)
+        if ttft <= self._slo_ttft and tpot <= self._slo_tpot:
+            self.n_good += 1
+
+
+# ---------------------------------------------------------------------------
 # Devices and engines
 # ---------------------------------------------------------------------------
 
@@ -223,6 +264,10 @@ class ServingDevice:
     """A MIG device hosting serving engines: partition FSM + energy
     integral, satisfying the kernel's device surface (``name`` /
     ``has_running`` / ``advance_to``)."""
+
+    #: flight recorder (repro.obs.Tracer); instance-assigned by the event
+    #: kernel when a run is traced, class-default None otherwise
+    tracer = None
 
     def __init__(self, model: str, name: str | None = None) -> None:
         try:
@@ -262,13 +307,14 @@ class EngineSim:
 
     def __init__(self, device: ServingDevice, partition: Partition,
                  model: LLMServingModel, cfg: ServingConfig,
-                 eid: int) -> None:
+                 eid: int, stats: ServingStats | None = None) -> None:
         self.device = device
         self.partition = partition
         partition.busy = True
         self.model = model
         self.cfg = cfg
         self.eid = eid
+        self.stats = stats
         self.running: list[ServingRequest] = []
         self.waiting: list[ServingRequest] = []
         self.migrating = False
@@ -313,6 +359,20 @@ class EngineSim:
         tokens = sum(r.kv_tokens for r in self.running) + extra_tokens
         return self.model.base_bytes() + self.model.kv_bytes(tokens)
 
+    def _complete(self, finished: list[ServingRequest], t: float) -> None:
+        """Retire finished requests: stream their latencies, trace them."""
+        tracer = self.device.tracer
+        for r in finished:
+            self.running.remove(r)
+            if self.stats is not None:
+                self.stats.complete(r)
+            if tracer is not None:
+                tracer.span(r.arrival, t, r.name,
+                            device=self.device.name,
+                            lane=f"engine{self.eid}", cat="request",
+                            ttft=r.ttft, tpot=r.tpot,
+                            preemptions=r.n_preemptions)
+
     # -- queue interface ---------------------------------------------------
 
     def enqueue(self, kernel: EventKernel, req: ServingRequest) -> None:
@@ -336,6 +396,11 @@ class EngineSim:
                     self.waiting.pop(0)
                     nxt.dropped = True
                     self.n_dropped += 1
+                    if self.device.tracer is not None:
+                        self.device.tracer.instant(
+                            "request.drop", device=self.device.name,
+                            lane=f"engine{self.eid}", req=nxt.name,
+                            kv_tokens=nxt.kv_tokens)
                     continue
                 break
             nxt.in_prefill = True
@@ -367,6 +432,12 @@ class EngineSim:
             extra_tokens=sum(1 for r in self.running if not r.in_prefill))
         if live_after > self.part_bytes:
             self.n_oom += 1
+            if self.device.tracer is not None:
+                self.device.tracer.instant(
+                    "oom", device=self.device.name,
+                    lane=f"engine{self.eid}",
+                    profile=self.partition.profile.name,
+                    live_gb=live_after / GB)
             if not (self._can_grow()
                     and self._begin_migration(kernel, crashed=True)):
                 self._preempt_until_fits()
@@ -392,8 +463,7 @@ class EngineSim:
             if r.generated >= r.decode_tokens:
                 r.t_done = t
                 finished.append(r)
-        for r in finished:
-            self.running.remove(r)
+        self._complete(finished, t)
 
         # allocator statistics -> the paper's time-series predictor
         self._requested_cum += (self.model.kv_bytes(grew)
@@ -422,6 +492,13 @@ class EngineSim:
         # QueueTickGauge whose probability is a 0/1 step
         pressure = self.gauge.observe(self, kernel.t)
         self.last_pressure = pressure
+        if self.device.tracer is not None:
+            self.device.tracer.counter(
+                f"engine{self.eid}.violation_prob",
+                pressure.violation_prob, device=self.device.name)
+            self.device.tracer.counter(
+                f"engine{self.eid}.queue_depth",
+                pressure.queue_depth, device=self.device.name)
         if pressure.violation_prob > 0.0 and self._can_grow():
             self.gauge.attempt()
             predicted = None
@@ -432,6 +509,11 @@ class EngineSim:
                                      predicted_gb=predicted,
                                      pressure=pressure):
                 self.n_scaleups += 1
+                if self.device.tracer is not None:
+                    self.device.tracer.instant(
+                        "scaleup", device=self.device.name,
+                        lane=f"engine{self.eid}",
+                        violation_prob=pressure.violation_prob)
                 self.device.sync()
                 return
         self._schedule_tick(kernel)
@@ -478,6 +560,7 @@ class EngineSim:
         slice (pressure keeps accumulating) or neighbours hold the space
         (the engine backs off for a cooldown)."""
         dev = self.device
+        from_profile = self.partition.profile.name
         trade_cost_s = dev.reconfig_s
         if pressure is not None and self.gauge.trade_rebuild_cost:
             # the honest price of interrupting this engine: reconfiguration
@@ -533,6 +616,13 @@ class EngineSim:
         self.last_prediction = None
         self._requested_cum = 0.0
         kernel.schedule_reconfig(kernel.t + dur, self)
+        if dev.tracer is not None:
+            dev.tracer.span(
+                kernel.t, kernel.t + dur, f"engine{self.eid}.grow",
+                device=dev.name, lane=f"engine{self.eid}", cat="reconfig",
+                from_profile=from_profile,
+                to_profile=self.partition.profile.name,
+                crashed=crashed, rebuild_tokens=rebuild_tokens)
         return True
 
     def finish_migration(self, kernel: EventKernel) -> None:
@@ -550,8 +640,7 @@ class EngineSim:
             if r.generated >= r.decode_tokens:
                 r.t_done = t
                 finished.append(r)
-        for r in finished:
-            self.running.remove(r)
+        self._complete(finished, t)
         self._admit(kernel)
         self._schedule_tick(kernel)
         self.device.sync()
@@ -572,6 +661,7 @@ class ServingPolicy(SchedulingPolicy):
         self.cfg = cfg
         self.name = cfg.name
         self.engines: list[EngineSim] = []
+        self.stats = ServingStats(cfg)
 
     # -- engine construction ----------------------------------------------
 
@@ -582,7 +672,8 @@ class ServingPolicy(SchedulingPolicy):
                 part = dev.pm.allocate(profile)
                 assert part is not None, (
                     f"cannot carve {profile.name} on {dev.name}")
-                engine = EngineSim(dev, part, self.model, self.cfg, eid)
+                engine = EngineSim(dev, part, self.model, self.cfg, eid,
+                                   stats=self.stats)
                 dev.engines.append(engine)
                 self.engines.append(engine)
                 eid += 1
@@ -639,30 +730,47 @@ class ServingPolicy(SchedulingPolicy):
     def result(self, kernel: EventKernel,
                jobs: list) -> "ServingMetrics":
         reqs: list[ServingRequest] = list(jobs)
-        completed = [r for r in reqs if r.done]
         makespan = max(kernel.t, 1e-9)
-        ttfts = [r.ttft for r in completed]
-        tpots = [r.tpot for r in completed]
-        lats = [r.latency for r in completed]
-        good = [r for r in completed
-                if r.ttft <= self.cfg.slo_ttft_s
-                and r.tpot <= self.cfg.slo_tpot_s]
-        tokens = sum(r.generated for r in completed)
+        if self.cfg.exact_quantiles:
+            # legacy end-of-run sorts over the stored request list — the
+            # bit-for-bit path the golden-parity tests pin
+            completed = [r for r in reqs if r.done]
+            ttfts = [r.ttft for r in completed]
+            tpots = [r.tpot for r in completed]
+            lats = [r.latency for r in completed]
+            good = [r for r in completed
+                    if r.ttft <= self.cfg.slo_ttft_s
+                    and r.tpot <= self.cfg.slo_tpot_s]
+            tokens = sum(r.generated for r in completed)
+            n_completed, n_good = len(completed), len(good)
+            mean_ttft = sum(ttfts) / max(len(ttfts), 1)
+            p99_ttft = percentile(ttfts, 99)
+            mean_tpot = sum(tpots) / max(len(tpots), 1)
+            p99_tpot = percentile(tpots, 99)
+            p99_latency = percentile(lats, 99)
+        else:
+            # streamed at completion time (ServingStats): P² tails, O(1)
+            # memory in the number of requests
+            st = self.stats
+            n_completed, n_good, tokens = st.n_completed, st.n_good, st.tokens
+            mean_ttft, p99_ttft = st.ttft.mean, st.ttft.percentile(99)
+            mean_tpot, p99_tpot = st.tpot.mean, st.tpot.percentile(99)
+            p99_latency = st.latency.percentile(99)
         return ServingMetrics(
             policy=self.name,
             fleet=", ".join(d.name for d in kernel.devices),
             n_requests=len(reqs),
-            n_completed=len(completed),
+            n_completed=n_completed,
             n_dropped=sum(e.n_dropped for e in self.engines),
             makespan=makespan,
             energy_j=sum(d.energy.joules for d in kernel.devices),
-            mean_ttft=sum(ttfts) / max(len(ttfts), 1),
-            p99_ttft=percentile(ttfts, 99),
-            mean_tpot=sum(tpots) / max(len(tpots), 1),
-            p99_tpot=percentile(tpots, 99),
-            p99_latency=percentile(lats, 99),
-            goodput_rps=len(good) / makespan,
-            throughput_rps=len(completed) / makespan,
+            mean_ttft=mean_ttft,
+            p99_ttft=p99_ttft,
+            mean_tpot=mean_tpot,
+            p99_tpot=p99_tpot,
+            p99_latency=p99_latency,
+            goodput_rps=n_good / makespan,
+            throughput_rps=n_completed / makespan,
             tokens_per_s=tokens / makespan,
             n_oom=sum(e.n_oom for e in self.engines),
             n_early_restarts=sum(e.n_early for e in self.engines),
@@ -721,7 +829,8 @@ class ServingMetrics:
 
 def run_serving(device_models: Sequence[str], cfg: ServingConfig,
                 requests: Iterable[ServingRequest],
-                model: LLMServingModel | None = None) -> ServingMetrics:
+                model: LLMServingModel | None = None,
+                tracer=None) -> ServingMetrics:
     """Simulate ``requests`` on a fleet of MIG devices under one serving
     policy; e.g. ``run_serving(["a100"], ServingConfig(policy="dynamic"),
     poisson_requests(200, rate_per_s=2.0))``."""
@@ -732,4 +841,4 @@ def run_serving(device_models: Sequence[str], cfg: ServingConfig,
         counts[m] = idx + 1
         devices.append(ServingDevice(m, name=f"{m}-{idx}"))
     policy = ServingPolicy(model or LLMServingModel(), cfg)
-    return EventKernel(devices, policy).run(requests)
+    return EventKernel(devices, policy, tracer=tracer).run(requests)

@@ -138,17 +138,23 @@ SERVING_GOLDEN = {
 #: threshold; the SLO refactor keeps that decision reachable as the
 #: degenerate ``gauge="queue_ticks"`` configuration (serving/slo.py), which
 #: these cases pin bit-for-bit.
+#: ``exact_quantiles=True``: the goldens pin the legacy end-of-run sorted
+#: percentiles; the streaming P² default is covered by tests/test_obs.py
 _SERVING_CASES = {
     "a100_dynamic_pred": (["a100"], dict(policy="dynamic", n_engines=2,
                                          use_prediction=True,
-                                         gauge="queue_ticks"), 120),
+                                         gauge="queue_ticks",
+                                         exact_quantiles=True), 120),
     "a100_dynamic_nopred": (["a100"], dict(policy="dynamic", n_engines=2,
                                            use_prediction=False,
-                                           gauge="queue_ticks"), 200),
+                                           gauge="queue_ticks",
+                                           exact_quantiles=True), 200),
     "h100_dynamic_nopred": (["h100"], dict(policy="dynamic", n_engines=2,
                                            use_prediction=False,
-                                           gauge="queue_ticks"), 200),
-    "a100_static": (["a100"], dict(policy="static", n_engines=2), 120),
+                                           gauge="queue_ticks",
+                                           exact_quantiles=True), 200),
+    "a100_static": (["a100"], dict(policy="static", n_engines=2,
+                                   exact_quantiles=True), 120),
 }
 
 FLEET_GOLDEN = {
@@ -199,12 +205,12 @@ BENCH_SERVING_GOLDEN = {
 }
 
 _BENCH_SERVING_CFG = {
-    "full": dict(policy="full"),
-    "static": dict(policy="static", n_engines=2),
+    "full": dict(policy="full", exact_quantiles=True),
+    "static": dict(policy="static", n_engines=2, exact_quantiles=True),
     "dynamic": dict(policy="dynamic", n_engines=2, use_prediction=False,
-                    gauge="queue_ticks"),
+                    gauge="queue_ticks", exact_quantiles=True),
     "dynamic+pred": dict(policy="dynamic", n_engines=2, use_prediction=True,
-                         gauge="queue_ticks"),
+                         gauge="queue_ticks", exact_quantiles=True),
 }
 
 

@@ -1,0 +1,325 @@
+"""Tests for the flight recorder + telemetry layer (``repro.obs``).
+
+Three contracts pin the subsystem:
+
+1. **No-op parity** — ``tracer=None`` (the default everywhere) leaves
+   every simulation's metrics bit-for-bit identical to a traced run:
+   recording must observe, never perturb.
+2. **Round-trip** — a trace survives write -> parse -> Chrome export,
+   the reader refuses foreign/stale schemas, and planner audits carry
+   every candidate's full CostTerms vector plus the deciding tier.
+3. **Streaming tails** — the P² estimator is exact below its seed
+   buffer, deterministic, and rank-accurate on heavy-tailed streams;
+   the ``exact=True`` facade reproduces the sorted-list percentiles
+   bit-for-bit (the golden path).
+"""
+
+import bisect
+import dataclasses
+import json
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.planner.cost import CostTerms
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.job import make_mix
+from repro.core.scheduler.metrics import percentile
+from repro.core.scheduler.policies import run_scheme_b
+from repro.fleet import make_fleet, make_router, run_fleet
+from repro.obs import (Counter, Gauge, MetricsRegistry, P2Quantile,
+                       SCHEMA, SCHEMA_VERSION, TailStats, Tracer,
+                       read_jsonl, to_chrome_trace)
+from repro.obs.counters import SEED_SAMPLES
+from repro.obs.report import main as report_main
+from repro.serving.sim import ServingConfig, poisson_requests, run_serving
+
+COST_TERM_KEYS = {f.name for f in dataclasses.fields(CostTerms)}
+
+SERVING_CFG = ServingConfig(policy="dynamic", n_engines=2,
+                            use_prediction=True, gauge="slo")
+
+
+def _serving_requests(n=150):
+    return poisson_requests(n, rate_per_s=2.5, seed=11)
+
+
+@pytest.fixture(scope="module")
+def traced_serving():
+    """One traced SLO serving run shared by the round-trip tests."""
+    tracer = Tracer(meta={"suite": "test_obs"})
+    metrics = run_serving(["a100"], SERVING_CFG, _serving_requests(),
+                          tracer=tracer)
+    return tracer, metrics
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges / registry
+
+
+class TestInstruments:
+    def test_counter_monotonic(self):
+        c = Counter("requests")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1.0)
+
+    def test_gauge_tracks_extremes(self):
+        g = Gauge("queue_depth")
+        for v in (3.0, 7.0, 1.0):
+            g.set(v)
+        assert (g.value, g.max, g.min) == (1.0, 7.0, 1.0)
+
+    def test_registry_create_or_return(self):
+        reg = MetricsRegistry()
+        assert reg.counter("a") is reg.counter("a")
+        assert reg.tail("t") is reg.tail("t")
+        with pytest.raises(TypeError):
+            reg.gauge("a")   # already a Counter
+
+    def test_registry_snapshot(self):
+        reg = MetricsRegistry()
+        reg.counter("n").inc(4)
+        reg.gauge("depth").set(2.0)
+        for x in (1.0, 2.0, 3.0):
+            reg.tail("lat").observe(x)
+        snap = reg.snapshot()
+        assert snap["n"] == 4
+        assert snap["depth"]["max"] == 2.0
+        assert snap["lat"]["count"] == 3
+        assert snap["lat"]["p50"] == pytest.approx(2.0)
+
+
+class TestTailStats:
+    def test_exact_facade_matches_sorted_list(self):
+        """exact=True is the golden path: bit-for-bit the legacy sort."""
+        rnd = random.Random(3)
+        xs = [rnd.expovariate(0.2) for _ in range(257)]
+        tail = TailStats("lat", exact=True)
+        for x in xs:
+            tail.observe(x)
+        for pct in (50, 90, 95, 99, 100):
+            assert tail.percentile(pct) == percentile(xs, pct)
+        assert tail.mean == pytest.approx(sum(xs) / len(xs))
+        assert (tail.min, tail.max) == (min(xs), max(xs))
+
+    def test_untracked_quantile_raises(self):
+        tail = TailStats("lat")
+        tail.observe(1.0)
+        with pytest.raises(KeyError):
+            tail.percentile(42)
+
+    def test_empty_is_nan(self):
+        assert math.isnan(TailStats("lat").percentile(99))
+
+
+# ---------------------------------------------------------------------------
+# P² streaming quantiles
+
+
+class TestP2Quantile:
+    def test_rejects_degenerate_quantile(self):
+        for q in (0.0, 1.0, -0.5, 2.0):
+            with pytest.raises(ValueError):
+                P2Quantile(q)
+
+    def test_exact_below_seed_buffer(self):
+        rnd = random.Random(7)
+        xs = [rnd.paretovariate(1.5) for _ in range(SEED_SAMPLES - 1)]
+        for k in (1, 5, len(xs)):
+            est = P2Quantile(0.99)
+            for x in xs[:k]:
+                est.observe(x)
+            assert est.value == pytest.approx(percentile(xs[:k], 99))
+
+    def test_deterministic(self):
+        rnd = random.Random(5)
+        xs = [rnd.lognormvariate(0.0, 1.5) for _ in range(2000)]
+        a, b = P2Quantile(0.95), P2Quantile(0.95)
+        for x in xs:
+            a.observe(x)
+            b.observe(x)
+        assert a.value == b.value
+
+    def test_value_accuracy_on_moderate_heavy_tail(self):
+        """Fixed-stream regression: Pareto(1.8) tails within a few %."""
+        rnd = random.Random(0)
+        xs = [rnd.paretovariate(1.8) for _ in range(5000)]
+        for q, tol in ((0.50, 0.02), (0.95, 0.06), (0.99, 0.12)):
+            est = P2Quantile(q)
+            for x in xs:
+                est.observe(x)
+            exact = percentile(xs, q * 100)
+            assert abs(est.value - exact) <= tol * exact, (q, est.value,
+                                                           exact)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 20),
+           n=st.integers(min_value=200, max_value=3000),
+           shape=st.floats(min_value=1.5, max_value=2.5),
+           pareto=st.booleans())
+    def test_rank_error_bounded_on_heavy_tails(self, seed, n, shape,
+                                               pareto):
+        """The sketch guarantee: the pXX estimate lands within 8 rank
+        points of XX on any heavy-tailed stream.  (Value-space error is
+        unbounded where the density vanishes — rank error is the honest
+        metric, and the one the report's tails inherit.)"""
+        rnd = random.Random(seed)
+        if pareto:
+            xs = [rnd.paretovariate(shape) for _ in range(n)]
+        else:
+            xs = [rnd.lognormvariate(0.0, shape) for _ in range(n)]
+        srt = sorted(xs)
+        for q in (0.50, 0.95, 0.99):
+            est = P2Quantile(q)
+            for x in xs:
+                est.observe(x)
+            assert srt[0] <= est.value <= srt[-1]
+            rank = bisect.bisect_right(srt, est.value) / n
+            assert abs(rank - q) <= 0.08, (q, rank, est.value)
+
+
+# ---------------------------------------------------------------------------
+# tracer no-op parity
+
+
+class TestTracerNoopParity:
+    def test_serving_metrics_unperturbed(self):
+        plain = run_serving(["a100"], SERVING_CFG, _serving_requests())
+        traced = run_serving(["a100"], SERVING_CFG, _serving_requests(),
+                             tracer=Tracer())
+        assert plain == traced
+
+    def test_batch_metrics_unperturbed(self):
+        a100 = MigA100Backend()
+        mix = [("gaussian", 4), ("euler3d", 2), ("myocyte", 3)]
+        plain = run_scheme_b(make_mix(mix), a100, A100_POWER,
+                             use_prediction=False)
+        traced = run_scheme_b(make_mix(mix), a100, A100_POWER,
+                              use_prediction=False, tracer=Tracer())
+        assert plain == traced
+
+    def test_fleet_metrics_unperturbed(self):
+        def go(tracer):
+            from repro.core.scheduler.job import rodinia_job
+            jobs = [rodinia_job("gaussian", i) for i in range(5)]
+            return run_fleet(make_fleet(["a100", "a100"]),
+                             make_router("best_fit"), jobs, tracer=tracer)
+        assert go(None) == go(Tracer())
+
+
+# ---------------------------------------------------------------------------
+# trace round-trip + planner audit
+
+
+class TestTraceRoundTrip:
+    def test_jsonl_roundtrip(self, traced_serving, tmp_path):
+        tracer, _ = traced_serving
+        path = tmp_path / "trace.jsonl"
+        n = tracer.write_jsonl(str(path))
+        header, records = read_jsonl(str(path))
+        assert n == len(tracer.records) == len(records)
+        assert header["schema"] == SCHEMA
+        assert header["schema_version"] == SCHEMA_VERSION
+        assert header["meta"]["suite"] == "test_obs"
+        assert "t_end" in header["meta"]
+        assert records == json.loads(json.dumps(tracer.records))
+
+    def test_reader_refuses_stale_schema(self, traced_serving, tmp_path):
+        tracer, _ = traced_serving
+        path = tmp_path / "stale.jsonl"
+        header = tracer.header()
+        header["schema_version"] = SCHEMA_VERSION + 1
+        path.write_text(json.dumps(header) + "\n")
+        with pytest.raises(ValueError, match="schema_version"):
+            read_jsonl(str(path))
+
+    def test_reader_refuses_foreign_file(self, tmp_path):
+        path = tmp_path / "foreign.jsonl"
+        path.write_text('{"hello": "world"}\n')
+        with pytest.raises(ValueError, match="header"):
+            read_jsonl(str(path))
+        empty = tmp_path / "empty.jsonl"
+        empty.write_text("")
+        with pytest.raises(ValueError, match="empty"):
+            read_jsonl(str(empty))
+
+    def test_chrome_export(self, traced_serving):
+        tracer, _ = traced_serving
+        chrome = to_chrome_trace(tracer.records, tracer.meta)
+        json.dumps(chrome)   # must be serializable as-is
+        events = chrome["traceEvents"]
+        phases = {e["ph"] for e in events}
+        assert phases <= {"M", "X", "i", "C"}
+        assert "X" in phases and "i" in phases
+        for e in events:
+            assert isinstance(e["pid"], int)
+            if e["ph"] == "X":
+                assert e["dur"] >= 0.0
+        # per-device slice-occupancy spans: the a100 process exists and
+        # carries request/reconfig slices on its engine lanes
+        procs = {e["args"]["name"] for e in events
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+        assert "a100-0" in procs
+        cats = {e["cat"] for e in events if e["ph"] == "X"}
+        assert "request" in cats and "reconfig" in cats
+
+    def test_audit_records_carry_full_cost_vectors(self, traced_serving):
+        tracer, metrics = traced_serving
+        audits = [r for r in tracer.records if r.get("type") == "audit"]
+        assert audits, "SLO serving must audit its grow/wait searches"
+        grows = [a for a in audits
+                 if a["chosen"] is not None
+                 and a["candidates"][a["chosen"]]["action"] != "wait"]
+        assert metrics.n_scaleups + metrics.n_early_restarts > 0
+        assert grows, "at least one growth decision must be audited"
+        for a in audits:
+            assert a["tiers"], "cost-model tier labels must be recorded"
+            for cand in a["candidates"]:
+                assert set(cand["terms"]) == COST_TERM_KEYS
+                assert len(cand["cost"]) == len(a["tiers"])
+            tier = a["deciding_tier"]
+            if tier is not None:
+                assert 0 <= tier < len(a["tiers"])
+                assert a["deciding_tier_label"] == a["tiers"][tier]
+
+
+# ---------------------------------------------------------------------------
+# report CLI
+
+
+class TestReportCLI:
+    def test_summarizes_valid_trace(self, traced_serving, tmp_path,
+                                    capsys):
+        tracer, _ = traced_serving
+        path = tmp_path / "trace.jsonl"
+        tracer.write_jsonl(str(path))
+        chrome = tmp_path / "trace.chrome.json"
+        assert report_main([str(path), "--chrome", str(chrome)]) == 0
+        out = capsys.readouterr().out
+        assert "plan searches" in out
+        assert "span occupancy" in out
+        loaded = json.loads(chrome.read_text())
+        assert loaded["traceEvents"]
+
+    def test_exits_2_on_schema_mismatch(self, traced_serving, tmp_path,
+                                        capsys):
+        tracer, _ = traced_serving
+        path = tmp_path / "stale.jsonl"
+        header = tracer.header()
+        header["schema_version"] = SCHEMA_VERSION + 7
+        path.write_text(json.dumps(header) + "\n")
+        assert report_main([str(path)]) == 2
+        assert "refusing to summarize" in capsys.readouterr().err
+
+    def test_exits_2_on_missing_or_foreign_file(self, tmp_path, capsys):
+        assert report_main([str(tmp_path / "nope.jsonl")]) == 2
+        foreign = tmp_path / "foreign.jsonl"
+        foreign.write_text('{"rows": []}\n')
+        assert report_main([str(foreign)]) == 2
+        assert "refusing to summarize" in capsys.readouterr().err
