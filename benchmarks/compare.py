@@ -67,6 +67,11 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
     "obs": [
         ("obs.trace_overhead_ratio", "lower"),
     ],
+    # new-vs-legacy kernels timed back-to-back in one process: like the
+    # planner speedup, the ratio is machine-normalized and safe to watch
+    "kernel": [
+        ("kernel.100k.speedup", "higher"),
+    ],
 }
 
 

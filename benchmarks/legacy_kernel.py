@@ -1,0 +1,208 @@
+"""The pre-indexed-queue event kernel, preserved verbatim as the
+benchmark baseline.
+
+``benchmarks/bench_kernel.py`` asserts the production kernel
+(:mod:`repro.core.scheduler.kernel`) processes >= 5x the events/sec of
+this snapshot on the same 100k-event workload.  This is the seed kernel
+exactly as it shipped before the indexed event queue + lazy device
+advancement landed: a flat ``heapq`` of rich-comparison dataclass events,
+an O(heap) ``has_events`` scan, and a full ``_advance_all`` device sweep
+on every event.
+
+The only additions are inert shims (``capacity_epoch`` / ``device_epoch``
+/ ``sync`` / ``bump_epoch`` / ``cancel`` / ``n_events``) so the *current*
+policy classes run on it unchanged — the shims deliberately return a
+fresh epoch on every read, which disables every skip-fast-path the new
+kernel enables, reproducing the seed cost profile: the benchmark then
+measures the kernel + dispatch infrastructure, not a handicapped policy.
+
+Do not "fix" performance problems here; that would invalidate the
+speedup baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Iterable, Sequence
+
+FINISH = "finish"
+RECONFIG = "reconfig"
+ARRIVAL = "arrival"
+TICK = "tick"
+
+_PRIO = {FINISH: 0, RECONFIG: 1, ARRIVAL: 2, TICK: 3}
+
+
+@dataclasses.dataclass(order=True)
+class LegacyEvent:
+    t: float
+    prio: int
+    sub: int
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: Any = dataclasses.field(compare=False, default=None)
+    cancelled: bool = dataclasses.field(compare=False, default=False)
+
+
+class LegacyEventKernel:
+    """Seed event loop: one flat heap, every device advanced every event."""
+
+    def __init__(self, devices: Sequence, policy, tracer=None) -> None:
+        if not devices:
+            raise ValueError("the kernel needs at least one device")
+        names = [d.name for d in devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device names: {names}")
+        self.devices = list(devices)
+        self.policy = policy
+        self.t = 0.0
+        self._heap: list[LegacyEvent] = []
+        self._seq = itertools.count()
+        self._dev_index = {id(d): i for i, d in enumerate(self.devices)}
+        self.queue: list = []
+        self.tracer = tracer
+        self.n_events = 0
+        self.n_jobs_seen = 0
+        self._epoch = itertools.count()
+        if tracer is not None:
+            tracer.bind_clock(lambda: self.t)
+            tracer.meta.setdefault("policy", policy.name)
+            tracer.meta.setdefault("devices", names)
+            for dev in self.devices:
+                dev.tracer = tracer
+                planner = getattr(dev, "planner", None)
+                if planner is not None:
+                    planner.tracer = tracer
+                    planner.owner = dev.name
+
+    # -- shims for current policy code (see module docstring) --------------
+
+    @property
+    def capacity_epoch(self) -> int:
+        # a fresh value on every read: no drain-skip key ever matches, so
+        # the policies rescan the full queue per dispatch, as the seed did
+        return next(self._epoch)
+
+    @property
+    def device_epoch(self) -> list[int]:
+        base = next(self._epoch)
+        return [base + i for i in range(len(self.devices))]
+
+    def bump_epoch(self, device=None) -> None:
+        pass
+
+    def sync(self, device) -> None:
+        pass  # devices are advanced eagerly; always current
+
+    def sync_all(self) -> None:
+        pass
+
+    def cancel(self, ev: LegacyEvent) -> None:
+        ev.cancelled = True
+
+    # -- event plumbing ----------------------------------------------------
+
+    def push(self, t: float, kind: str, payload: Any = None,
+             sub: int = 0, seq: int | None = None) -> LegacyEvent:
+        ev = LegacyEvent(t=t, prio=_PRIO[kind], sub=sub,
+                         seq=next(self._seq) if seq is None else seq,
+                         kind=kind, payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def schedule_tick(self, t: float, payload: Any = None) -> LegacyEvent:
+        return self.push(t, TICK, payload)
+
+    def schedule_reconfig(self, t: float, payload: Any = None) -> LegacyEvent:
+        return self.push(t, RECONFIG, payload)
+
+    def has_events(self, kind: str | None = None) -> bool:
+        if kind is None:
+            return any(not ev.cancelled for ev in self._heap)
+        return any(ev.kind == kind and not ev.cancelled
+                   for ev in self._heap)
+
+    # -- device runs -------------------------------------------------------
+
+    def start(self, device, job, partition, setup_s: float = 0.0):
+        run = device.start(job, partition, setup_s=setup_s)
+        self.push(run.t_end, FINISH, device,
+                  sub=self._dev_index[id(device)], seq=run.seq)
+        if self.tracer is not None:
+            profile = partition.profile
+            self.tracer.span(
+                run.t_start, run.t_end, job.name, device=device.name,
+                lane=f"{profile.name}#{partition.pid}", cat="run",
+                outcome=run.plan.outcome, profile=profile.name,
+                mem_gb=job.mem_gb, setup_s=setup_s)
+        return run
+
+    # -- the loop ----------------------------------------------------------
+
+    def _any_running(self) -> bool:
+        return any(d.has_running for d in self.devices)
+
+    def _advance_all(self) -> None:
+        for dev in self.devices:
+            dev.advance_to(self.t)
+
+    def run(self, jobs: Iterable):
+        jobs = list(jobs)
+        names = [getattr(j, "name", None) for j in jobs]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate job names: {dupes[:5]}")
+        if self.policy.online:
+            for job in sorted((j for j in jobs if j.arrival > 0.0),
+                              key=lambda j: j.arrival):
+                self.push(job.arrival, ARRIVAL, job)
+                self.n_jobs_seen += 1
+            self.queue = [j for j in jobs if j.arrival <= 0.0]
+            self.n_jobs_seen += len(self.queue)
+        else:
+            self.queue = list(jobs)
+            self.n_jobs_seen = len(self.queue)
+        self.policy.on_init(self, jobs)
+
+        while True:
+            progressed = self.policy.dispatch(self)
+            if self.queue and not progressed and not self._any_running():
+                self.policy.on_stall(self)
+            if not self._heap:
+                break
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.t = ev.t
+            self.n_events += 1
+            if ev.kind == FINISH:
+                run = ev.payload.pop_next_finish()   # advances that device
+                self._advance_all()                  # idle-advance the rest
+                self.policy.on_finish(self, ev.payload, run)
+            elif ev.kind == ARRIVAL:
+                self._advance_all()
+                self._trace_queued(ev.payload)
+                self.policy.on_arrival(self, ev.payload)
+                while (self._heap and self._heap[0].kind == ARRIVAL
+                       and self._heap[0].t <= ev.t + 1e-12):
+                    tied = heapq.heappop(self._heap).payload
+                    self.n_events += 1
+                    self._trace_queued(tied)
+                    self.policy.on_arrival(self, tied)
+            elif ev.kind == RECONFIG:
+                self._advance_all()
+                self.policy.on_reconfig(self, ev.payload)
+            else:  # TICK
+                self._advance_all()
+                self.policy.on_tick(self, ev.payload)
+
+        if self.tracer is not None:
+            self.tracer.finish(self.t)
+        return self.policy.result(self, jobs)
+
+    def _trace_queued(self, item) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("queued", lane="queue",
+                                job=str(getattr(item, "name", item)))

@@ -17,10 +17,10 @@ import subprocess
 import sys
 
 from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
-                        bench_fig4_ml, bench_fleet, bench_kernels, bench_obs,
-                        bench_planner, bench_predictor, bench_reachability,
-                        bench_roofline, bench_serving, bench_slo,
-                        bench_tpu_pod)
+                        bench_fig4_ml, bench_fleet, bench_kernel,
+                        bench_kernels, bench_obs, bench_planner,
+                        bench_predictor, bench_reachability, bench_roofline,
+                        bench_serving, bench_slo, bench_tpu_pod)
 
 #: Bump when the BENCH_<name>.json layout changes incompatibly;
 #: ``benchmarks/compare.py`` refuses baselines from another schema.
@@ -41,6 +41,7 @@ BENCHES = {
     "slo": bench_slo.run,                     # SLO-aware vs reactive growth
     "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
     "obs": bench_obs.run,                     # flight-recorder overhead bound
+    "kernel": bench_kernel.run,               # event-kernel events/sec gates
 }
 
 

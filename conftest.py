@@ -7,6 +7,7 @@ deterministic shim in ``tests/_shims`` so all seven test modules still
 collect and the property tests run a fixed pseudo-random sample.
 """
 
+import os
 import sys
 from pathlib import Path
 
@@ -15,7 +16,36 @@ import pytest
 try:
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover - exercised only without hypothesis
-    sys.path.insert(0, str(Path(__file__).resolve().parent / "tests" / "_shims"))
+    sys.path.insert(
+        0, str(Path(__file__).resolve().parent / "tests" / "_shims"))
+
+#: per-test wall-clock budget (seconds, call phase only).  The suite is a
+#: simulator: a test that takes minutes is a workload misconfigured into a
+#: benchmark, and it slows every tier-1 iteration for everyone.  Override
+#: with TEST_DURATION_BUDGET_S (0 disables).
+DURATION_BUDGET_S = float(os.environ.get("TEST_DURATION_BUDGET_S", "30"))
+
+_over_budget: list[tuple[str, float]] = []
+
+
+def pytest_runtest_logreport(report):
+    if (DURATION_BUDGET_S > 0 and report.when == "call"
+            and report.duration > DURATION_BUDGET_S):
+        _over_budget.append((report.nodeid, report.duration))
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if _over_budget:
+        terminalreporter.section("duration budget")
+        for nodeid, duration in _over_budget:
+            terminalreporter.write_line(
+                f"OVER BUDGET ({duration:.1f}s > {DURATION_BUDGET_S:.0f}s): "
+                f"{nodeid}")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _over_budget and session.exitstatus == 0:
+        session.exitstatus = 1
 
 
 @pytest.fixture(autouse=True, scope="session")

@@ -71,6 +71,13 @@ class ClusterPolicy(SchedulingPolicy):
         self.data_movement_s_total = 0.0
         self.migrations: list[str] = []
         self.jct_tail = TailStats("jct_s")
+        # queue-rescan fast-path (mirrors FleetPolicy.dispatch): a job that
+        # failed every zone fails again until some device's state moves —
+        # zone *ranking* shifts with the tariff clock, but ranking only
+        # reorders successes, never turns an everywhere-infeasible job
+        # placeable, so the epoch alone keys the skip
+        self._drain_epoch = None
+        self._fresh: list[Job] = []
 
     # -- dispatch ----------------------------------------------------------
 
@@ -116,18 +123,35 @@ class ClusterPolicy(SchedulingPolicy):
         return False
 
     def dispatch(self, kernel: EventKernel) -> bool:
-        for zone in self.zones:
-            if isinstance(zone.router, CostRouter):
-                zone.router.price_per_j = zone.tariff.price_at(kernel.t)
-        placed = drain_queue(kernel, functools.partial(self._dispatch_one, kernel))
-        for zone in self.zones:
-            if zone.router.consolidates:
-                gate_idle_devices(zone.devices)
+        epoch = kernel.capacity_epoch
+        attempt = functools.partial(self._dispatch_one, kernel)
+        if epoch != self._drain_epoch or self._fresh:
+            for zone in self.zones:
+                if isinstance(zone.router, CostRouter):
+                    zone.router.price_per_j = zone.tariff.price_at(kernel.t)
+            if epoch != self._drain_epoch:
+                self._drain_epoch = epoch
+                self._fresh.clear()
+                placed = drain_queue(kernel, attempt)
+            else:
+                fresh, self._fresh = self._fresh, []
+                placed = drain_queue(kernel, attempt, candidates=fresh)
+            for zone in self.zones:
+                if zone.router.consolidates:
+                    gate_idle_devices(kernel, zone.devices)
+        else:
+            placed = False
+        # tariff metering integrates at every event boundary regardless —
+        # the dollars integral is golden-pinned at event-time granularity
         for meter in self._meters.values():
             meter.observe(kernel.t)
         return placed
 
     # -- events ------------------------------------------------------------
+
+    def on_arrival(self, kernel: EventKernel, job) -> None:
+        kernel.queue.append(job)
+        self._fresh.append(job)
 
     def on_finish(self, kernel: EventKernel, dev: DeviceSim, run) -> None:
         if run.plan.outcome in (OOM, EARLY_RESTART):

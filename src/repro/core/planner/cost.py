@@ -32,6 +32,8 @@ import dataclasses
 import math
 from typing import Hashable
 
+from repro.core import reachability
+
 
 @dataclasses.dataclass(frozen=True)
 class CostTerms:
@@ -171,6 +173,13 @@ FOLLOW_THE_SUN_ZONE_COST = CostModel("follow_the_sun_zone", (
 ))
 
 
+#: key -> (pinned backend, log1p(reach of the empty device)).  The
+#: normalizer is a per-backend constant, but computing it walks the
+#: reachability cache-key path — measurable when the fleet routers score
+#: hundreds of thousands of candidate devices on a backlogged trace.
+_REACH0_LOG: dict[Hashable, tuple] = reachability.register_backend_cache({})
+
+
 def normalized_reachability(backend, state: Hashable,
                             reach: int | None = None) -> float:
     """Current-state reachability normalized against the empty device, in
@@ -178,7 +187,14 @@ def normalized_reachability(backend, state: Hashable,
     comparable.  1.0 = pristine, -> 0 as the FSM saturates."""
     if reach is None:
         reach = backend.reachability(state)
-    reach0 = backend.reachability(backend.initial_state())
-    if reach0 <= 1:
+    key = reachability.reachability_cache_key(backend)
+    hit = _REACH0_LOG.get(key)
+    if hit is None:
+        reach0 = backend.reachability(backend.initial_state())
+        log0 = math.log1p(reach0) if reach0 > 1 else 0.0
+        reachability.bounded_cache_insert(_REACH0_LOG, key, (backend, log0))
+    else:
+        log0 = hit[1]
+    if log0 == 0.0:
         return 1.0
-    return math.log1p(reach) / math.log1p(reach0)
+    return math.log1p(reach) / log0

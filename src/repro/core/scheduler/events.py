@@ -145,7 +145,8 @@ class DeviceSim:
     def __init__(self, backend: PartitionBackend, power: DevicePowerModel,
                  use_prediction: bool = True, policy: str = "",
                  name: str = "dev0",
-                 reconfig_cost_s: float = RECONFIG_COST_S) -> None:
+                 reconfig_cost_s: float = RECONFIG_COST_S,
+                 record_runs: bool = True) -> None:
         self.backend = backend
         self.pm = PartitionManager(backend)
         self.planner = PartitionPlanner(self.pm, SCHEME_B_COST)
@@ -154,6 +155,10 @@ class DeviceSim:
         self.policy = policy
         self.name = name
         self.reconfig_cost_s = reconfig_cost_s
+        #: per-run RunRecord retention — disable for million-event trace
+        #: replays, where a stored per-run list is exactly the memory
+        #: cliff the streaming tail estimators were built to avoid
+        self.record_runs = record_runs
         self.t = 0.0
         self._heap: list[_Running] = []
         self._seq = itertools.count()
@@ -227,11 +232,13 @@ class DeviceSim:
         self._live_mem_gb -= min(run.job.mem_gb,
                                  run.partition.profile.mem_gb)
         run.partition.busy = False
-        self.records.append(RunRecord(
-            job=run.job.name, profile=run.partition.profile.name,
-            start=run.t_start, end=run.t_end, outcome=run.plan.outcome,
-            compute_fraction=run.partition.profile.compute_fraction,
-            mem_gb=run.job.mem_gb, wasted_seconds=run.plan.wasted_seconds))
+        if self.record_runs:
+            self.records.append(RunRecord(
+                job=run.job.name, profile=run.partition.profile.name,
+                start=run.t_start, end=run.t_end, outcome=run.plan.outcome,
+                compute_fraction=run.partition.profile.compute_fraction,
+                mem_gb=run.job.mem_gb,
+                wasted_seconds=run.plan.wasted_seconds))
         if run.plan.outcome == OOM:
             self.n_oom += 1
             self.wasted += run.plan.wasted_seconds

@@ -4,7 +4,7 @@ Every simulation in this repo — the paper's single-device batch policies
 (baseline / scheme A / scheme B), the multi-device fleet orchestrator, and
 the request-level LLM serving layer — used to carry its own hand-rolled
 event loop.  This module is the one loop they all share: a single event
-heap over
+queue over
 
 * **arrivals**  — jobs (or serving requests) joining the admission queue,
 * **finishes**  — a device run completing (done / OOM / early restart),
@@ -14,10 +14,10 @@ heap over
   continuous-batching iteration boundaries).
 
 Policy/mechanism split (MISO, arXiv:2207.11428; optimal MIG placement,
-arXiv:2409.06646): the kernel owns time, the heap and the admission queue;
-a :class:`SchedulingPolicy` owns *what to start where* via small hooks
-(``dispatch`` / ``on_finish`` / ``on_tick`` / ...).  Adding a policy or a
-workload layer is a new policy class, not a new event loop.
+arXiv:2409.06646): the kernel owns time, the event queue and the admission
+queue; a :class:`SchedulingPolicy` owns *what to start where* via small
+hooks (``dispatch`` / ``on_finish`` / ``on_tick`` / ...).  Adding a policy
+or a workload layer is a new policy class, not a new event loop.
 
 Determinism contract: events at equal times order FINISH < RECONFIG <
 ARRIVAL < TICK (a finish frees capacity before a simultaneous arrival is
@@ -25,14 +25,36 @@ routed — the tie-break every legacy loop used), then by device index, then
 by submission sequence.  The kernel performs device operations in exactly
 the order the legacy loops did, which is what makes the golden parity
 tests (tests/test_kernel_parity.py) bit-for-bit.
+
+Trace-scale machinery (million-event replays):
+
+* :class:`IndexedEventQueue` — a tuple-keyed binary heap with live counts
+  per event kind (O(1) ``has_events``), lazy deletion with compaction once
+  cancelled entries dominate, and per-kind / per-device next-event peeks.
+* **Staged arrivals** — online runs feed arrivals from a sorted iterator
+  one event at a time instead of pushing the entire trace into the heap
+  up front; ``run(jobs, stream=True)`` accepts a lazy job iterator so a
+  million-row trace is never materialized as a second list.
+* **Lazy device advancement** — policies that declare
+  ``lazy_advance = True`` (the fleet) stop paying an N-device
+  ``advance_to`` sweep per event.  The kernel instead records the clock's
+  event times and *replays* them per device on :meth:`sync`, so every
+  device still executes the exact same sequence of ``advance_to`` calls
+  the eager sweep would have issued — which is what keeps the energy /
+  memory integrals bit-for-bit with the goldens.  The replay buffer is
+  compacted (forced ``sync_all``) before it can grow unboundedly.
+* ``capacity_epoch`` / ``device_epoch`` — monotonic counters bumped
+  whenever placement-relevant state changes (a start, a finish, a
+  reconfiguration, power gating).  Policies key their queue-rescan
+  fast-paths off these; the kernel only provides the fact of change.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
-from typing import Any, Iterable, Sequence
+from collections import Counter
+from typing import Any, Iterable, Iterator, Sequence
 
 FINISH = "finish"
 RECONFIG = "reconfig"
@@ -42,20 +64,207 @@ TICK = "tick"
 #: tie-break rank at equal event times; see module docstring.
 _PRIO = {FINISH: 0, RECONFIG: 1, ARRIVAL: 2, TICK: 3}
 
+#: force a ``sync_all`` once this many clock advances are pending replay —
+#: bounds the lazy-advancement buffer so a million-event run holds a few
+#: thousand floats, not a per-event list.
+_REPLAY_COMPACT_AT = 4096
 
-@dataclasses.dataclass(order=True)
+
 class Event:
-    t: float
-    prio: int
-    sub: int    # device index for finishes; 0 otherwise
-    seq: int    # per-device run sequence for finishes, global otherwise
-    kind: str = dataclasses.field(compare=False)
-    payload: Any = dataclasses.field(compare=False, default=None)
-    #: a cancelled event is skipped without advancing the clock — heap
-    #: entries cannot be removed cheaply, so policies mark instead (e.g. a
-    #: fleet admission-recheck tick whose deferred job was admitted by an
-    #: earlier finish: popping it live would integrate phantom idle time)
-    cancelled: bool = dataclasses.field(compare=False, default=False)
+    """One scheduled occurrence.  Heap ordering lives in the queue's tuple
+    keys, not here — comparing plain tuples is measurably faster than
+    dataclass rich comparison on the million-event path."""
+
+    __slots__ = ("t", "prio", "sub", "seq", "kind", "payload",
+                 "_cancelled", "_popped", "_owner")
+
+    def __init__(self, t: float, prio: int, sub: int, seq: int,
+                 kind: str, payload: Any = None) -> None:
+        self.t = t
+        self.prio = prio
+        self.sub = sub    # device index for finishes; 0 otherwise
+        self.seq = seq    # per-device run sequence for finishes, else global
+        self.kind = kind
+        self.payload = payload
+        self._cancelled = False
+        self._popped = False
+        self._owner: IndexedEventQueue | None = None
+
+    @property
+    def cancelled(self) -> bool:
+        """A cancelled event is skipped without advancing the clock — heap
+        entries cannot be removed cheaply, so policies mark instead (e.g. a
+        fleet admission-recheck tick whose deferred job was admitted by an
+        earlier finish: popping it live would integrate phantom idle time).
+        Assigning this property keeps the owning queue's live counts
+        honest; entries are physically dropped at the next compaction."""
+        return self._cancelled
+
+    @cancelled.setter
+    def cancelled(self, value: bool) -> None:
+        value = bool(value)
+        if value == self._cancelled:
+            return
+        self._cancelled = value
+        owner = self._owner
+        if owner is not None:
+            if value:
+                owner._note_cancel(self)
+            else:
+                owner._note_uncancel(self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        flags = "cancelled" if self._cancelled else ""
+        return (f"Event(t={self.t}, kind={self.kind}, sub={self.sub}, "
+                f"seq={self.seq}{', ' + flags if flags else ''})")
+
+
+class IndexedEventQueue:
+    """Binary heap of ``(t, prio, sub, seq, Event)`` tuples with
+
+    * **live counts per kind** — ``has()`` / ``count()`` are O(1) instead
+      of the seed's O(heap) scans (the fleet stall path calls them per
+      dispatch),
+    * **lazy deletion + compaction** — cancelling marks the event and
+      decrements the counts; once cancelled entries exceed both a floor
+      and half the heap, the heap is rebuilt without them, and
+    * **per-kind / per-device next-event peeks** — secondary lazily-pruned
+      heaps answer "when is the next TICK" / "when does device 3 next
+      finish" without touching the main heap's order.
+    """
+
+    #: never compact below this many cancelled entries — rebuilding a tiny
+    #: heap per cancel would be quadratic in the pathological cancel loop
+    COMPACT_MIN = 64
+
+    __slots__ = ("_heap", "_live", "_n_cancelled", "_by_kind", "_by_sub")
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, int, int, Event]] = []
+        self._live: Counter[str] = Counter()
+        self._n_cancelled = 0
+        self._by_kind: dict[str, list[tuple[float, int, int, Event]]] = {}
+        self._by_sub: dict[int, list[tuple[float, int, int, Event]]] = {}
+
+    def __len__(self) -> int:
+        return len(self._heap) - self._n_cancelled
+
+    def push(self, ev: Event) -> None:
+        ev._owner = self
+        self._live[ev.kind] += 1
+        heapq.heappush(self._heap, (ev.t, ev.prio, ev.sub, ev.seq, ev))
+        # (t, sub, seq) is unique per kind — FINISH seqs are per-device
+        # run counters, so sub must outrank seq or the tuple falls through
+        # to comparing Events
+        heapq.heappush(self._by_kind.setdefault(ev.kind, []),
+                       (ev.t, ev.sub, ev.seq, ev))
+        if ev.kind == FINISH:
+            heapq.heappush(self._by_sub.setdefault(ev.sub, []),
+                           (ev.t, ev.sub, ev.seq, ev))
+
+    def pop(self) -> Event | None:
+        heap = self._heap
+        while heap:
+            ev = heapq.heappop(heap)[4]
+            if ev._cancelled:
+                self._n_cancelled -= 1
+                ev._owner = None
+                continue
+            self._live[ev.kind] -= 1
+            ev._popped = True
+            ev._owner = None
+            self._drop_stale(self._by_kind.get(ev.kind))
+            if ev.kind == FINISH:
+                self._drop_stale(self._by_sub.get(ev.sub))
+            return ev
+        return None
+
+    @staticmethod
+    def _drop_stale(side: list[tuple[float, int, int, Event]] | None) -> None:
+        """Physically free the just-popped event's side-heap entries.
+
+        Within one kind the main-heap key ``(t, prio, sub, seq)`` collapses
+        to the side key ``(t, sub, seq)`` (prio is constant per kind), so a
+        live event popped from the main heap is the minimum live entry of
+        its side heaps: it sits at the top behind at most older stale
+        entries, and popping the stale prefix removes it.  Without this, a
+        cancel-free run never compacts and the side heaps retain every
+        Event — and its Job payload — for the whole replay.
+        """
+        while side and (side[0][3]._cancelled or side[0][3]._popped):
+            heapq.heappop(side)
+
+    def peek(self) -> Event | None:
+        heap = self._heap
+        while heap:
+            ev = heap[0][4]
+            if not ev._cancelled:
+                return ev
+            heapq.heappop(heap)
+            self._n_cancelled -= 1
+            ev._owner = None
+        return None
+
+    def has(self, kind: str | None = None) -> bool:
+        if kind is None:
+            return len(self._heap) > self._n_cancelled
+        return self._live[kind] > 0
+
+    def count(self, kind: str | None = None) -> int:
+        if kind is None:
+            return len(self)
+        return self._live[kind]
+
+    @staticmethod
+    def _prune_peek(side: list[tuple[float, int, int, Event]]) -> Event | None:
+        while side:
+            ev = side[0][3]
+            if not (ev._cancelled or ev._popped):
+                return ev
+            heapq.heappop(side)
+        return None
+
+    def next_time(self, kind: str | None = None) -> float | None:
+        """Earliest live event time, optionally restricted to one kind."""
+        if kind is None:
+            ev = self.peek()
+        else:
+            ev = self._prune_peek(self._by_kind.get(kind, []))
+        return ev.t if ev is not None else None
+
+    def next_finish_for(self, sub: int) -> float | None:
+        """When device ``sub`` next finishes, or None — per-device
+        next-event awareness without scanning the main heap."""
+        ev = self._prune_peek(self._by_sub.get(sub, []))
+        return ev.t if ev is not None else None
+
+    # -- cancellation bookkeeping (driven by Event.cancelled) --------------
+
+    def _note_cancel(self, ev: Event) -> None:
+        self._live[ev.kind] -= 1
+        self._n_cancelled += 1
+        self._maybe_compact()
+
+    def _note_uncancel(self, ev: Event) -> None:
+        self._live[ev.kind] += 1
+        self._n_cancelled -= 1
+
+    def _maybe_compact(self) -> None:
+        if (self._n_cancelled >= self.COMPACT_MIN
+                and self._n_cancelled * 2 > len(self._heap)):
+            live = []
+            for entry in self._heap:
+                if entry[4]._cancelled:
+                    entry[4]._owner = None
+                else:
+                    live.append(entry)
+            heapq.heapify(live)
+            self._heap = live
+            self._n_cancelled = 0
+            for side in (*self._by_kind.values(), *self._by_sub.values()):
+                side[:] = [e for e in side
+                           if not (e[3]._cancelled or e[3]._popped)]
+                heapq.heapify(side)
 
 
 class SchedulingPolicy:
@@ -65,10 +274,18 @@ class SchedulingPolicy:
     kernel queue up front regardless of ``arrival``; ``online=True``
     policies see jobs with ``arrival > 0`` only when their ARRIVAL event
     fires — exactly the legacy scheme-B/fleet admission semantics.
+
+    ``lazy_advance=False`` (the default) keeps the seed behaviour: every
+    device is advanced to every event time before any hook runs.  A policy
+    may set it True only if its ``on_arrival`` / ``on_tick`` /
+    ``on_reconfig`` hooks never read device clocks or integrals — the
+    kernel then defers advancement and replays it on :meth:`EventKernel
+    .sync`, which the policy must call before mutating a device.
     """
 
     name = "policy"
     online = False
+    lazy_advance = False
 
     def on_init(self, kernel: "EventKernel", jobs: list) -> None:
         """Called once before the loop, after the queue is seeded."""
@@ -102,7 +319,7 @@ class SchedulingPolicy:
 
 
 class EventKernel:
-    """One event heap, one clock, N devices, one pluggable policy.
+    """One event queue, one clock, N devices, one pluggable policy.
 
     A *device* is anything with ``name``, ``has_running``, ``advance_to(t)``
     and — if the policy starts :class:`~repro.core.scheduler.job.Job` runs
@@ -121,11 +338,31 @@ class EventKernel:
         self.devices = list(devices)
         self.policy = policy
         self.t = 0.0
-        self._heap: list[Event] = []
+        self.events = IndexedEventQueue()
         self._seq = itertools.count()
         self._dev_index = {id(d): i for i, d in enumerate(self.devices)}
         self.queue: list = []   # admitted, not yet placed
         self.tracer = tracer    # repro.obs.Tracer flight recorder, or None
+        #: bumped whenever placement-relevant state changes anywhere
+        #: (start / finish / reconfig / gate); policies key queue-rescan
+        #: fast-paths off it
+        self.capacity_epoch = 0
+        #: same, per device — lets a policy retry a previously-unplaceable
+        #: job against only the devices that changed since it last failed
+        self.device_epoch = [0] * len(self.devices)
+        #: kernel loop iterations (events processed); benchmark currency
+        self.n_events = 0
+        #: arrivals admitted (staged events + queue-seeded) — the job count
+        #: for streamed runs, where no jobs list survives the loop
+        self.n_jobs_seen = 0
+        self._lazy = bool(getattr(policy, "lazy_advance", False))
+        self._times: list[float] = []       # clock advances pending replay
+        self._cursor = [0] * len(self.devices)
+        self._pending: Iterator | None = None   # staged-arrival source
+        self._next_job = None                   # lookahead from stream peel
+        self._stream = False
+        self._names_seen: set = set()
+        self._last_arrival = 0.0
         if tracer is not None:
             tracer.bind_clock(lambda: self.t)
             tracer.meta.setdefault("policy", policy.name)
@@ -144,7 +381,7 @@ class EventKernel:
         ev = Event(t=t, prio=_PRIO[kind], sub=sub,
                    seq=next(self._seq) if seq is None else seq,
                    kind=kind, payload=payload)
-        heapq.heappush(self._heap, ev)
+        self.events.push(ev)
         return ev
 
     def schedule_tick(self, t: float, payload: Any = None) -> Event:
@@ -153,19 +390,66 @@ class EventKernel:
     def schedule_reconfig(self, t: float, payload: Any = None) -> Event:
         return self.push(t, RECONFIG, payload)
 
+    def cancel(self, ev: Event) -> None:
+        ev.cancelled = True
+
     def has_events(self, kind: str | None = None) -> bool:
-        if kind is None:
-            return any(not ev.cancelled for ev in self._heap)
-        return any(ev.kind == kind and not ev.cancelled
-                   for ev in self._heap)
+        return self.events.has(kind)
+
+    def next_event_time(self, kind: str | None = None) -> float | None:
+        return self.events.next_time(kind)
+
+    # -- placement-epoch bookkeeping ---------------------------------------
+
+    def bump_epoch(self, device=None) -> None:
+        """Placement-relevant state changed (on ``device``, if given)."""
+        self.capacity_epoch += 1
+        if device is not None:
+            self.device_epoch[self._dev_index[id(device)]] += 1
+
+    # -- lazy device advancement -------------------------------------------
+
+    def sync(self, device) -> None:
+        """Replay every recorded clock advance this device has not seen.
+
+        The replay issues the exact ``advance_to(t)`` sequence the eager
+        per-event sweep would have — same calls, same order, same floats —
+        so energy/memory integrals are bitwise identical to eager mode.
+        Idempotent and O(pending) per device."""
+        i = self._dev_index[id(device)]
+        cur = self._cursor[i]
+        times = self._times
+        if cur < len(times):
+            advance = device.advance_to
+            for t in times[cur:]:
+                advance(t)
+            self._cursor[i] = len(times)
+
+    def sync_all(self) -> None:
+        """Bring every device to the current clock and clear the replay
+        buffer (the compaction that keeps memory flat at a million
+        events)."""
+        for dev in self.devices:
+            self.sync(dev)
+        self._times.clear()
+        self._cursor = [0] * len(self.devices)
+
+    def _record_time(self, t: float) -> None:
+        times = self._times
+        if not times or t > times[-1]:
+            times.append(t)
+            if len(times) >= _REPLAY_COMPACT_AT:
+                self.sync_all()
 
     # -- device runs -------------------------------------------------------
 
     def start(self, device, job, partition, setup_s: float = 0.0):
         """Start ``job`` on ``device`` and register its finish event."""
+        self.sync(device)   # lazy mode: the device may lag the clock
         run = device.start(job, partition, setup_s=setup_s)
         self.push(run.t_end, FINISH, device,
                   sub=self._dev_index[id(device)], seq=run.seq)
+        self.bump_epoch(device)
         if self.tracer is not None:
             profile = partition.profile
             self.tracer.span(
@@ -175,69 +459,155 @@ class EventKernel:
                 mem_gb=job.mem_gb, setup_s=setup_s)
         return run
 
+    # -- staged arrivals ---------------------------------------------------
+
+    def _admit_job(self, job) -> None:
+        if self._stream:
+            name = getattr(job, "name", None)
+            if name in self._names_seen:
+                raise ValueError(f"duplicate job names: [{name!r}]")
+            self._names_seen.add(name)
+            if job.arrival < self._last_arrival:
+                raise ValueError(
+                    f"streamed jobs must be sorted by arrival: "
+                    f"{name!r} at {job.arrival} after {self._last_arrival}")
+            self._last_arrival = job.arrival
+        self.n_jobs_seen += 1
+
+    def _stage_next_arrival(self) -> None:
+        """Keep exactly one future arrival in the event queue.  Arrival
+        events are staged in sorted order, so their relative seq order —
+        the same-time tie-break — matches the seed's push-all-upfront
+        behaviour while the heap holds one arrival instead of a million."""
+        it = self._pending
+        if it is None:
+            return
+        job = self._next_job
+        self._next_job = None
+        if job is None:
+            job = next(it, None)
+        if job is None:
+            self._pending = None
+            return
+        self._admit_job(job)
+        self.push(job.arrival, ARRIVAL, job)
+
     # -- the loop ----------------------------------------------------------
 
     def _any_running(self) -> bool:
         return any(d.has_running for d in self.devices)
 
-    def _advance_all(self) -> None:
-        for dev in self.devices:
-            dev.advance_to(self.t)
+    def run(self, jobs: Iterable, stream: bool = False):
+        """Drive the policy over ``jobs`` until the event queue drains.
 
-    def run(self, jobs: Iterable):
-        jobs = list(jobs)
-        names = [getattr(j, "name", None) for j in jobs]
-        if len(set(names)) != len(names):
-            # completion/turnaround accounting is keyed by name; duplicates
-            # would silently overwrite each other instead of failing loudly
-            dupes = sorted({n for n in names if names.count(n) > 1})
-            raise ValueError(f"duplicate job names: {dupes[:5]}")
-        if self.policy.online:
-            for job in sorted((j for j in jobs if j.arrival > 0.0),
-                              key=lambda j: j.arrival):
-                self.push(job.arrival, ARRIVAL, job)
-            self.queue = [j for j in jobs if j.arrival <= 0.0]
+        ``stream=True`` (online policies only) treats ``jobs`` as a lazy
+        iterator already sorted by ``arrival``: jobs are admitted one
+        event at a time and never materialized as a list — the path that
+        keeps a million-row trace replay's memory flat.  The policy's
+        ``result`` hook then receives an empty jobs list and must fall
+        back to per-device accounting (the fleet policy does).
+        """
+        self._stream = stream
+        if stream:
+            if not self.policy.online:
+                raise ValueError("stream=True requires an online policy")
+            it = iter(jobs)
+            # jobs at/before t=0 are queue-seeded, not arrival events —
+            # peel them off the sorted stream's head
+            for job in it:
+                if job.arrival > 0.0:
+                    self._next_job = job
+                    break
+                self._admit_job(job)
+                self.queue.append(job)
+            self._pending = it
+            self._stage_next_arrival()
+            jobs = []
         else:
-            self.queue = list(jobs)
+            jobs = list(jobs)
+            counts = Counter(getattr(j, "name", None) for j in jobs)
+            dupes = sorted((n for n, c in counts.items() if c > 1),
+                           key=str)
+            if dupes:
+                # completion/turnaround accounting is keyed by name;
+                # duplicates would silently overwrite each other
+                raise ValueError(f"duplicate job names: {dupes[:5]}")
+            if self.policy.online:
+                self.queue = [j for j in jobs if j.arrival <= 0.0]
+                self.n_jobs_seen = len(self.queue)
+                self._pending = iter(sorted(
+                    (j for j in jobs if j.arrival > 0.0),
+                    key=lambda j: j.arrival))
+                self._stage_next_arrival()
+            else:
+                self.queue = list(jobs)
+                self.n_jobs_seen = len(jobs)
         self.policy.on_init(self, jobs)
 
+        policy = self.policy
+        events = self.events
+        lazy = self._lazy
         while True:
-            progressed = self.policy.dispatch(self)
+            progressed = policy.dispatch(self)
             if self.queue and not progressed and not self._any_running():
-                self.policy.on_stall(self)
-            if not self._heap:
+                policy.on_stall(self)
+            ev = events.pop()
+            if ev is None:
                 break
-            ev = heapq.heappop(self._heap)
-            if ev.cancelled:
-                continue
             self.t = ev.t
-            if ev.kind == FINISH:
-                run = ev.payload.pop_next_finish()   # advances that device
-                self._advance_all()                  # idle-advance the rest
-                self.policy.on_finish(self, ev.payload, run)
-            elif ev.kind == ARRIVAL:
-                self._advance_all()
+            self.n_events += 1
+            kind = ev.kind
+            if kind == FINISH:
+                dev = ev.payload
+                # replay strictly-earlier advances first: pop_next_finish
+                # integrates [dev.t, t_end] itself, with the seed's exact
+                # accounting (the finishing run excluded from that
+                # interval's active-compute — popping before advancing is
+                # the golden-pinned order)
+                self.sync(dev)
+                run = dev.pop_next_finish()
+                self._record_time(ev.t)
+                if not lazy:
+                    self.sync_all()
+                self.bump_epoch(dev)
+                policy.on_finish(self, dev, run)
+            elif kind == ARRIVAL:
+                self._record_time(ev.t)
+                if not lazy:
+                    self.sync_all()
+                self._stage_next_arrival()
                 self._trace_queued(ev.payload)
-                self.policy.on_arrival(self, ev.payload)
+                policy.on_arrival(self, ev.payload)
                 # admit simultaneous arrivals together, as the legacy loops
                 # did (`arrival <= t + eps`): dispatching between two
                 # tied arrivals would let a consolidating policy gate a
                 # device for zero seconds and charge a spurious wake
-                while (self._heap and self._heap[0].kind == ARRIVAL
-                       and self._heap[0].t <= ev.t + 1e-12):
-                    tied = heapq.heappop(self._heap).payload
-                    self._trace_queued(tied)
-                    self.policy.on_arrival(self, tied)
-            elif ev.kind == RECONFIG:
-                self._advance_all()
-                self.policy.on_reconfig(self, ev.payload)
+                while True:
+                    nxt = events.peek()
+                    if (nxt is None or nxt.kind != ARRIVAL
+                            or nxt.t > ev.t + 1e-12):
+                        break
+                    events.pop()
+                    self.n_events += 1
+                    self._stage_next_arrival()
+                    self._trace_queued(nxt.payload)
+                    policy.on_arrival(self, nxt.payload)
+            elif kind == RECONFIG:
+                self._record_time(ev.t)
+                if not lazy:
+                    self.sync_all()
+                self.bump_epoch()
+                policy.on_reconfig(self, ev.payload)
             else:  # TICK
-                self._advance_all()
-                self.policy.on_tick(self, ev.payload)
+                self._record_time(ev.t)
+                if not lazy:
+                    self.sync_all()
+                policy.on_tick(self, ev.payload)
 
+        self.sync_all()   # lazy stragglers: final integrals need every t
         if self.tracer is not None:
             self.tracer.finish(self.t)
-        return self.policy.result(self, jobs)
+        return policy.result(self, jobs)
 
     def _trace_queued(self, item) -> None:
         if self.tracer is not None:

@@ -14,9 +14,12 @@ arXiv:2409.06646).
 from repro.core.scheduler.admission import (AdmissionController,
                                             AdmissionDecision,
                                             ArrivalForecast, reach_floor)
-from repro.fleet.arrivals import (diurnal_arrivals, jobs_from_trace,
-                                  load_alibaba_csv, poisson_arrivals,
-                                  synthetic_alibaba_rows)
+from repro.fleet.arrivals import (diurnal_arrivals, iter_alibaba_csv,
+                                  iter_jobs_from_trace,
+                                  iter_synthetic_alibaba_rows,
+                                  jobs_from_trace, load_alibaba_csv,
+                                  poisson_arrivals, synthetic_alibaba_rows,
+                                  write_alibaba_csv)
 from repro.fleet.devices import make_device, make_fleet
 from repro.fleet.energy import (FleetCostSummary, FleetEnergyIntegrator,
                                 PricedEnergyIntegrator)
@@ -32,7 +35,9 @@ __all__ = [
     "FleetEnergyIntegrator", "FleetMetrics", "FleetOrchestrator",
     "FleetPolicy", "PricedEnergyIntegrator", "RandomRouter", "Router",
     "RoundRobinRouter", "device_cost_terms", "diurnal_arrivals",
-    "jobs_from_trace", "load_alibaba_csv", "make_device", "make_fleet",
-    "make_router", "poisson_arrivals", "reach_floor", "run_fleet",
-    "synthetic_alibaba_rows",
+    "iter_alibaba_csv", "iter_jobs_from_trace",
+    "iter_synthetic_alibaba_rows", "jobs_from_trace", "load_alibaba_csv",
+    "make_device", "make_fleet", "make_router", "poisson_arrivals",
+    "reach_floor", "run_fleet", "synthetic_alibaba_rows",
+    "write_alibaba_csv",
 ]

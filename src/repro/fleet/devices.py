@@ -29,7 +29,8 @@ DEVICE_CATALOGUE = {
 
 def make_device(model: str, name: str | None = None,
                 use_prediction: bool = True,
-                power: DevicePowerModel | None = None) -> DeviceSim:
+                power: DevicePowerModel | None = None,
+                record_runs: bool = True) -> DeviceSim:
     """One fleet device, e.g. ``make_device("h100", name="h100-0")``."""
     try:
         backend_cls, default_power, reconfig_s = DEVICE_CATALOGUE[model]
@@ -38,11 +39,13 @@ def make_device(model: str, name: str | None = None,
                          f"known: {sorted(DEVICE_CATALOGUE)}") from None
     return DeviceSim(backend_cls(), power or default_power,
                      use_prediction=use_prediction, policy=name or model,
-                     name=name or model, reconfig_cost_s=reconfig_s)
+                     name=name or model, reconfig_cost_s=reconfig_s,
+                     record_runs=record_runs)
 
 
 def make_fleet(shape: list[str] | dict[str, int],
-               use_prediction: bool = True) -> list[DeviceSim]:
+               use_prediction: bool = True,
+               record_runs: bool = True) -> list[DeviceSim]:
     """Build a fleet from ``["a100", "a100", "h100"]`` or ``{"a100": 2,
     "h100": 2}``; names are ``model-<index>``."""
     if isinstance(shape, dict):
@@ -53,5 +56,6 @@ def make_fleet(shape: list[str] | dict[str, int],
         idx = counts.get(model, 0)
         counts[model] = idx + 1
         devices.append(make_device(model, name=f"{model}-{idx}",
-                                   use_prediction=use_prediction))
+                                   use_prediction=use_prediction,
+                                   record_runs=record_runs))
     return devices

@@ -39,14 +39,17 @@ from repro.obs.counters import TailStats
 
 
 def drain_queue(kernel: EventKernel,
-                try_dispatch: Callable[[Job], bool]) -> bool:
+                try_dispatch: Callable[[Job], bool],
+                candidates: Sequence[Job] | None = None) -> bool:
     """FIFO-with-backfill drain of the kernel's admission queue: try every
     queued job (an unplaceable head must not starve jobs behind it) and
     drop the placed ones.  Filter by identity: Job is a value-equality
     dataclass, so ``list.remove`` could drop an equal-but-different job.
-    Shared by the fleet and cluster policies."""
+    ``candidates`` restricts the attempt to a sub-list (the incremental
+    fresh-arrivals fast-path) while removal still runs against the real
+    queue.  Shared by the fleet and cluster policies."""
     placed: set[int] = set()
-    for job in kernel.queue:
+    for job in kernel.queue if candidates is None else candidates:
         if try_dispatch(job):
             placed.add(id(job))
     if placed:
@@ -55,11 +58,18 @@ def drain_queue(kernel: EventKernel,
     return bool(placed)
 
 
-def gate_idle_devices(devices: Sequence[DeviceSim]) -> None:
-    """Consolidation step: power-gate every device left fully idle."""
+def gate_idle_devices(kernel: EventKernel,
+                      devices: Sequence[DeviceSim]) -> None:
+    """Consolidation step: power-gate every device left fully idle.  The
+    device is synced to the kernel clock first (lazy advancement would
+    otherwise bill the un-replayed interval at the gated floor), and each
+    gate bumps the placement epoch — gating changes the wake-latency term
+    in every subsequent placement's cost."""
     for dev in devices:
         if not dev.gated and not dev.has_running:
+            kernel.sync(dev)
             dev.gate()
+            kernel.bump_epoch(dev)
 
 
 class FleetPolicy(SchedulingPolicy):
@@ -74,6 +84,11 @@ class FleetPolicy(SchedulingPolicy):
     """
 
     online = True
+    #: the fleet's hooks never read device clocks off-schedule: arrivals
+    #: only queue, ticks only re-arm — so the kernel may defer the
+    #: N-device advance sweep and replay it on sync (bit-for-bit; see
+    #: EventKernel.sync)
+    lazy_advance = True
 
     def __init__(self, router: Router, wake_latency_s: float = WAKE_LATENCY_S,
                  energy: FleetEnergyIntegrator | None = None,
@@ -90,12 +105,19 @@ class FleetPolicy(SchedulingPolicy):
         self._force_admit = False
         self._recheck_tick = None                # live admission-recheck Event
         self._last_device: dict[str, str] = {}   # job name -> device name
+        # -- queue-rescan fast-path state (see dispatch) --
+        self._can_skip = router.stateless_rank   # else: seed rescan path
+        self._drain_key = None                   # state key of last full scan
+        self._fresh: list[Job] = []              # arrivals since that scan
+        self._arrival_rev = 0                    # admission forecast revision
+        self._fail_snap: dict[int, tuple] = {}   # id(job) -> device epochs
 
     # -- dispatch ----------------------------------------------------------
 
     def dispatch_job(self, kernel: EventKernel, job: Job,
                      devices: Sequence[DeviceSim] | None = None,
-                     extra_setup_s: float = 0.0):
+                     extra_setup_s: float = 0.0,
+                     changed: frozenset[int] | None = None):
         """Route one job over ``devices`` (default: every kernel device) and
         commit to the first whose placement ladder succeeds AND whose
         post-placement reachability passes admission (when controlled).
@@ -103,9 +125,23 @@ class FleetPolicy(SchedulingPolicy):
         This is the entry point for an *external* router — the cluster
         layer hands each fleet jobs restricted to that fleet's devices,
         with ``extra_setup_s`` carrying the cross-zone data-movement cost.
-        Returns ``(device, committed action)`` or ``None``.
+        ``changed`` (kernel device indices) restricts the planner search to
+        devices whose state moved since the job last failed everywhere —
+        an unchanged device reproduces the same failed search, so skipping
+        it cannot alter the outcome.  Returns ``(device, committed
+        action)`` or ``None``.
         """
         pool = kernel.devices if devices is None else devices
+        if changed is not None:
+            # filter BEFORE ranking: the router's cost model is the
+            # expensive part of a retry, and an unchanged device's failure
+            # is already proven — ranking only the changed subset keeps
+            # their relative order, and none of the skipped devices could
+            # have admitted the job anyway
+            pool = [d for d in pool
+                    if kernel._dev_index[id(d)] in changed]
+            if not pool:
+                return None
         blocked = False
         for dev in self.router.rank(job, pool):
             plan = dev.plan_place(job)
@@ -142,6 +178,7 @@ class FleetPolicy(SchedulingPolicy):
                         cat="migrate", job=job.name, source=prev)
             self._last_device[job.name] = dev.name
             setup = result.setup_s + extra_setup_s
+            kernel.sync(dev)   # lazy advancement: bill wake/setup from now
             if dev.gated:
                 dev.ungate()
                 setup += self.wake_latency_s
@@ -175,19 +212,76 @@ class FleetPolicy(SchedulingPolicy):
         self._last_device.pop(job_name, None)
 
     def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
-        return self.dispatch_job(kernel, job) is not None
+        changed = None
+        track = (self._can_skip and self.admission is None
+                 and not self._force_admit)
+        if track:
+            snap = self._fail_snap.get(id(job))
+            if snap is not None:
+                epochs = kernel.device_epoch
+                if snap == tuple(epochs):
+                    return False   # nothing changed anywhere: same failure
+                changed = frozenset(
+                    i for i, (then, now) in enumerate(zip(snap, epochs))
+                    if then != now)
+        placed = self.dispatch_job(kernel, job, changed=changed)
+        if placed is not None:
+            self._fail_snap.pop(id(job), None)
+            return True
+        if track:
+            self._fail_snap[id(job)] = tuple(kernel.device_epoch)
+        return False
+
+    def _scan_key(self, kernel: EventKernel):
+        """State fingerprint for queue rescans.  Placement outcomes depend
+        only on device/partition state (the epoch) — plus, under admission
+        control, the clock and the arrival forecast, which the decision
+        reads directly."""
+        if self.admission is not None:
+            return (kernel.capacity_epoch, kernel.t, self._arrival_rev)
+        return (kernel.capacity_epoch,)
 
     def dispatch(self, kernel: EventKernel) -> bool:
-        placed = drain_queue(kernel,
-                             functools.partial(self._dispatch_one, kernel))
+        """Drain the queue — skipping provably-redundant rescans.
+
+        The kernel calls dispatch after every event; the seed re-tried
+        every queued job each time, an O(events x queue x devices) planner
+        storm on a backlogged trace.  A failed placement can only flip if
+        something changed, so: a full scan runs when the state key moved
+        (captured *before* the scan — placements inside it bump the epoch
+        and force the follow-up rescan the eager loop also did); when the
+        key is unchanged, only arrivals admitted since the last scan are
+        tried; with neither, dispatch is O(1).  Per-job failure snapshots
+        of the per-device epochs then narrow each full-scan retry to the
+        devices that actually changed.  Every skip suppresses a search
+        whose outcome is proven identical, which is why the golden parity
+        suite pins this path bit-for-bit against the eager seed."""
+        key = self._scan_key(kernel)
+        attempt = functools.partial(self._dispatch_one, kernel)
+        if self._force_admit or not self._can_skip:
+            # stall escape (retry everything below the admission floor,
+            # leaving the key stale so the normal path rescans afterwards)
+            # — or a stateful router, which must see the seed's exact
+            # rank-call sequence
+            placed = drain_queue(kernel, attempt)
+            self._fresh.clear()
+        elif key != self._drain_key:
+            self._drain_key = key
+            self._fresh.clear()
+            placed = drain_queue(kernel, attempt)
+        elif self._fresh:
+            fresh, self._fresh = self._fresh, []
+            placed = drain_queue(kernel, attempt, candidates=fresh)
+        else:
+            placed = False
         if not kernel.queue and self._recheck_tick is not None:
             # every deferred job found a home via an earlier event: a live
             # recheck tick would only stretch the run (and its idle-energy
             # integral) past the real last finish
-            self._recheck_tick.cancelled = True
+            kernel.cancel(self._recheck_tick)
             self._recheck_tick = None
         if self.router.consolidates:
-            gate_idle_devices(kernel.devices)
+            gate_idle_devices(kernel, kernel.devices)
         return placed
 
     # -- events ------------------------------------------------------------
@@ -195,7 +289,9 @@ class FleetPolicy(SchedulingPolicy):
     def on_arrival(self, kernel: EventKernel, job) -> None:
         if self.admission is not None:
             self.admission.note_arrival(kernel.t, job)
+            self._arrival_rev += 1   # the forecast moved: rescans may flip
         kernel.queue.append(job)
+        self._fresh.append(job)
 
     def on_finish(self, kernel: EventKernel, dev: DeviceSim, run) -> None:
         if run.plan.outcome in (OOM, EARLY_RESTART):
@@ -235,6 +331,11 @@ class FleetPolicy(SchedulingPolicy):
     def result(self, kernel: EventKernel, jobs: list) -> FleetMetrics:
         energy = self.energy or FleetEnergyIntegrator(kernel.devices)
         arrival_of = {j.name: j.arrival for j in jobs}
+        if not arrival_of:
+            # streamed run: no jobs list survives the loop — the devices'
+            # own arrival stamps carry the same facts
+            for dev in kernel.devices:
+                arrival_of.update(dev.arrivals)
         completions: dict[str, float] = {}
         for dev in kernel.devices:
             completions.update(dev.finished)
@@ -248,7 +349,8 @@ class FleetPolicy(SchedulingPolicy):
         return FleetMetrics(
             policy=self.router.name,
             fleet=", ".join(d.name for d in kernel.devices),
-            n_jobs=len(jobs), makespan=max(kernel.t, 1e-9),
+            n_jobs=len(jobs) or kernel.n_jobs_seen,
+            makespan=max(kernel.t, 1e-9),
             energy_j=energy.joules,
             gated_seconds=energy.gated_seconds,
             idle_joules_avoided=energy.idle_joules_avoided,

@@ -35,6 +35,12 @@ class Router:
     name = "router"
     #: consolidation routers ask the orchestrator to gate idle devices
     consolidates = False
+    #: True when ``rank`` is a pure function of (job, device states) — no
+    #: internal counter or RNG advanced per call.  Only then may the
+    #: orchestrator *skip* redundant rank calls (the queue-rescan
+    #: fast-path): skipping a stateful rank would desync its rotation or
+    #: random stream and change placements, not just speed
+    stateless_rank = False
 
     def rank(self, job: Job, devices: Sequence[DeviceSim]
              ) -> list[DeviceSim]:
@@ -113,10 +119,17 @@ class CostRouter(Router):
 
     cost_model: CostModel
     price_per_j: float = 0.0
+    stateless_rank = True
 
     def rank(self, job: Job, devices: Sequence[DeviceSim]
              ) -> list[DeviceSim]:
-        return sorted(self.feasible(job, devices),
+        feas = self.feasible(job, devices)
+        if len(feas) <= 1:
+            # ordering a singleton is free — and the changed-device retry
+            # path hands the router one-device pools constantly, so the
+            # cost evaluation here would dominate a backlogged drain
+            return feas
+        return sorted(feas,
                       key=lambda d: self.cost_model.cost(
                           device_cost_terms(job, d,
                                             price_per_j=self.price_per_j)))

@@ -37,12 +37,46 @@ class Tracer:
     All emit methods are cheap plain-dict appends; the intended zero-cost
     path is the *caller* holding ``tracer=None`` and skipping the call
     entirely, so a tracer never needs an "enabled" flag.
+
+    With ``sink=<path>`` the tracer streams each record to that JSONL file
+    the moment it is emitted instead of buffering it — ``records`` stays
+    empty, so a million-event replay holds O(1) trace memory.  The header
+    goes out first with the construction-time meta; :meth:`finish` appends
+    a trailing ``{"type": "meta", ...}`` record carrying the final meta
+    (``t_end`` is only known at the end, and line one of a written stream
+    cannot be rewritten), which :func:`read_jsonl` folds back into the
+    header.  Call :meth:`close` (or use the tracer as a context manager)
+    to flush the file.
     """
 
-    def __init__(self, meta: dict[str, Any] | None = None) -> None:
+    def __init__(self, meta: dict[str, Any] | None = None,
+                 sink: str | None = None) -> None:
         self.records: list[dict[str, Any]] = []
         self.meta: dict[str, Any] = dict(meta or {})
         self._clock: Callable[[], float] | None = None
+        self.sink_path = sink
+        self._sink = None
+        if sink is not None:
+            self._sink = open(sink, "w")
+            self._sink.write(json.dumps(self.header()) + "\n")
+
+    def _emit(self, rec: dict[str, Any]) -> None:
+        if self._sink is not None:
+            self._sink.write(json.dumps(rec) + "\n")
+        else:
+            self.records.append(rec)
+
+    def close(self) -> None:
+        """Flush and close the streaming sink (no-op when buffering)."""
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- clock -------------------------------------------------------------
 
@@ -62,7 +96,7 @@ class Tracer:
                "device": device, "lane": lane, "cat": cat}
         if args:
             rec["args"] = args
-        self.records.append(rec)
+        self._emit(rec)
 
     def instant(self, name: str, *, t: float | None = None,
                 device: str = "", lane: str = "", cat: str = "instant",
@@ -72,22 +106,27 @@ class Tracer:
                "name": name, "device": device, "lane": lane, "cat": cat}
         if args:
             rec["args"] = args
-        self.records.append(rec)
+        self._emit(rec)
 
     def counter(self, name: str, value: float, *, t: float | None = None,
                 device: str = "") -> None:
         """A time-series sample (rendered as a counter track)."""
-        self.records.append(
+        self._emit(
             {"type": "counter", "t": self.now() if t is None else t,
              "name": name, "device": device, "value": value})
 
     def audit(self, record: dict[str, Any]) -> None:
         """A planner decision audit (shape: audit.plan_audit_record)."""
-        self.records.append(record)
+        self._emit(record)
 
     def finish(self, t_end: float) -> None:
         """Stamp the run's end time into the trace metadata."""
         self.meta["t_end"] = t_end
+        if self._sink is not None:
+            # the header line is already on disk; carry the final meta in a
+            # trailing record that read_jsonl folds back into the header
+            self._sink.write(json.dumps(
+                {"type": "meta", "meta": self.meta}) + "\n")
 
     # -- serialization -----------------------------------------------------
 
@@ -98,6 +137,10 @@ class Tracer:
     def write_jsonl(self, path: str) -> int:
         """Write header + records, one JSON object per line; returns the
         number of records written (excluding the header)."""
+        if self.sink_path is not None:
+            raise RuntimeError(
+                f"streaming tracer does not retain records; the trace is "
+                f"already at {self.sink_path}")
         with open(path, "w") as f:
             f.write(json.dumps(self.header()) + "\n")
             for rec in self.records:
@@ -125,7 +168,16 @@ def read_jsonl(path: str) -> tuple[dict[str, Any], list[dict[str, Any]]]:
             raise ValueError(
                 f"{path}: schema_version {got} != supported "
                 f"{SCHEMA_VERSION}; re-record the trace with this tree")
-        records = [json.loads(line) for line in f if line.strip()]
+        records = []
+        for line in f:
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            if rec.get("type") == "meta":
+                # trailing meta from a streaming tracer (see Tracer.finish)
+                header["meta"] = rec.get("meta", {})
+            else:
+                records.append(rec)
     return header, records
 
 

@@ -1,0 +1,256 @@
+"""IndexedEventQueue bookkeeping: O(1) counts, lazy deletion, compaction.
+
+The kernel's determinism tests (tests/test_kernel_parity.py) pin the
+*ordering* contract; these tests pin the *accounting* contract — live
+counts per kind must stay honest across every push/cancel/uncancel/pop
+interleaving, because ``EventKernel.has_events`` / ``next_event_time``
+answer straight from them without scanning the heap.
+"""
+
+import random
+
+import pytest
+
+from repro.core.scheduler.kernel import (ARRIVAL, FINISH, RECONFIG, TICK,
+                                         Event, IndexedEventQueue)
+
+
+def _ev(t, kind=TICK, prio=3, sub=0, seq=0, payload=None):
+    return Event(t, prio, sub, seq, kind, payload)
+
+
+class TestCounts:
+    def test_push_pop_counts(self):
+        q = IndexedEventQueue()
+        assert not q.has()
+        assert q.count() == 0
+        q.push(_ev(1.0, TICK, seq=1))
+        q.push(_ev(2.0, FINISH, prio=0, sub=3, seq=1))
+        q.push(_ev(0.5, ARRIVAL, prio=2, seq=2))
+        assert len(q) == 3
+        assert q.count(TICK) == 1
+        assert q.count(FINISH) == 1
+        assert q.count(ARRIVAL) == 1
+        assert q.count(RECONFIG) == 0
+        assert q.has(FINISH) and not q.has(RECONFIG)
+
+        ev = q.pop()
+        assert ev.kind == ARRIVAL          # earliest t wins
+        assert q.count(ARRIVAL) == 0
+        assert not q.has(ARRIVAL)
+        assert len(q) == 2
+
+    def test_ordering_prio_breaks_time_ties(self):
+        q = IndexedEventQueue()
+        q.push(_ev(5.0, TICK, prio=3, seq=1))
+        q.push(_ev(5.0, ARRIVAL, prio=2, seq=2))
+        q.push(_ev(5.0, RECONFIG, prio=1, seq=3))
+        q.push(_ev(5.0, FINISH, prio=0, sub=1, seq=1))
+        kinds = [q.pop().kind for _ in range(4)]
+        assert kinds == [FINISH, RECONFIG, ARRIVAL, TICK]
+
+    def test_cancel_updates_counts_without_pop(self):
+        q = IndexedEventQueue()
+        evs = [_ev(float(i), TICK, seq=i) for i in range(5)]
+        for ev in evs:
+            q.push(ev)
+        evs[0].cancelled = True
+        evs[2].cancelled = True
+        assert len(q) == 3
+        assert q.count(TICK) == 3
+        # cancelled-at-head is skipped, clock never sees t=0
+        assert q.pop().t == 1.0
+        assert q.pop().t == 3.0
+
+    def test_cancel_idempotent_and_uncancel(self):
+        q = IndexedEventQueue()
+        ev = _ev(1.0, TICK, seq=1)
+        q.push(ev)
+        ev.cancelled = True
+        ev.cancelled = True                # no double decrement
+        assert q.count(TICK) == 0 and len(q) == 0
+        ev.cancelled = False
+        assert q.count(TICK) == 1 and len(q) == 1
+        assert q.pop() is ev
+
+    def test_pop_empty_returns_none(self):
+        q = IndexedEventQueue()
+        assert q.pop() is None
+        assert q.peek() is None
+        assert q.next_time() is None
+        assert q.next_time(TICK) is None
+        assert q.next_finish_for(0) is None
+
+    def test_cancel_all_then_has_is_false(self):
+        q = IndexedEventQueue()
+        evs = [_ev(float(i), ARRIVAL, prio=2, seq=i) for i in range(4)]
+        for ev in evs:
+            q.push(ev)
+        for ev in evs:
+            ev.cancelled = True
+        assert not q.has()
+        assert not q.has(ARRIVAL)
+        assert q.pop() is None
+
+
+class TestSideHeaps:
+    def test_next_time_per_kind(self):
+        q = IndexedEventQueue()
+        q.push(_ev(4.0, TICK, seq=1))
+        q.push(_ev(2.0, ARRIVAL, prio=2, seq=2))
+        q.push(_ev(9.0, TICK, seq=3))
+        assert q.next_time() == 2.0
+        assert q.next_time(TICK) == 4.0
+        assert q.next_time(ARRIVAL) == 2.0
+        assert q.next_time(RECONFIG) is None
+
+    def test_next_time_skips_cancelled(self):
+        q = IndexedEventQueue()
+        first = _ev(1.0, TICK, seq=1)
+        q.push(first)
+        q.push(_ev(3.0, TICK, seq=2))
+        first.cancelled = True
+        assert q.next_time(TICK) == 3.0
+
+    def test_next_time_skips_popped(self):
+        q = IndexedEventQueue()
+        q.push(_ev(1.0, TICK, seq=1))
+        q.push(_ev(2.0, TICK, seq=2))
+        assert q.pop().t == 1.0
+        assert q.next_time(TICK) == 2.0
+
+    def test_pop_physically_prunes_side_heaps(self):
+        """A popped event must leave the side heaps, not just be marked:
+        cancel-free runs never compact, so marked-but-retained entries
+        would hold every Event (and its payload) for a whole replay."""
+        q = IndexedEventQueue()
+        for i in range(60):
+            q.push(_ev(float(i), FINISH, prio=0, sub=i % 4, seq=i))
+        for i in range(40):
+            q.push(_ev(float(i), ARRIVAL, prio=2, seq=100 + i))
+        while q.has():
+            q.pop()
+        assert all(not side for side in q._by_kind.values())
+        assert all(not side for side in q._by_sub.values())
+
+    def test_interleaved_push_pop_keeps_side_heaps_tight(self):
+        # steady state: stale entries never outlive the next pop of their
+        # kind, so the side heaps track the live population
+        q = IndexedEventQueue()
+        seq = 0
+        for round_ in range(50):
+            for _ in range(4):
+                q.push(_ev(float(seq), FINISH, prio=0, sub=seq % 3, seq=seq))
+                seq += 1
+            for _ in range(3):
+                q.pop()
+        live = q.count(FINISH)
+        assert live == 50
+        assert len(q._by_kind[FINISH]) == live
+        assert sum(len(s) for s in q._by_sub.values()) == live
+
+    def test_next_finish_for_is_per_device(self):
+        q = IndexedEventQueue()
+        # same (t, seq) on two devices: per-device run counters collide,
+        # the sub component must keep the tuples comparable
+        q.push(_ev(5.0, FINISH, prio=0, sub=0, seq=1))
+        q.push(_ev(5.0, FINISH, prio=0, sub=1, seq=1))
+        q.push(_ev(7.0, FINISH, prio=0, sub=0, seq=2))
+        assert q.next_finish_for(0) == 5.0
+        assert q.next_finish_for(1) == 5.0
+        assert q.next_finish_for(2) is None
+        first = q.pop()
+        assert first.sub == 0              # sub breaks the tie
+        assert q.next_finish_for(0) == 7.0
+        assert q.next_finish_for(1) == 5.0
+
+    def test_identical_finish_keys_across_devices_no_type_error(self):
+        # regression: side-heap tuples once keyed (t, seq, Event); two
+        # devices' finishes tying on both fell through to Event < Event
+        q = IndexedEventQueue()
+        for sub in range(8):
+            q.push(_ev(1.0, FINISH, prio=0, sub=sub, seq=1))
+        assert q.count(FINISH) == 8
+        assert [q.pop().sub for _ in range(8)] == list(range(8))
+
+
+class TestCompaction:
+    def test_compaction_drops_cancelled_entries(self):
+        q = IndexedEventQueue()
+        evs = [_ev(float(i), TICK, seq=i) for i in range(200)]
+        for ev in evs:
+            q.push(ev)
+        for ev in evs[:150]:
+            ev.cancelled = True            # 150 >= COMPACT_MIN, > half
+        # compaction fired mid-stream (once cancelled > half the heap):
+        # the heap physically shrank, and bookkeeping stays consistent
+        assert len(q._heap) < 200
+        assert len(q._heap) == 50 + q._n_cancelled
+        assert len(q) == 50
+        assert q.count(TICK) == 50
+        assert q.pop().t == 150.0          # survivors still in order
+
+    def test_no_compaction_below_floor(self):
+        q = IndexedEventQueue()
+        evs = [_ev(float(i), TICK, seq=i) for i in range(20)]
+        for ev in evs:
+            q.push(ev)
+        for ev in evs[:19]:
+            ev.cancelled = True            # > half but < COMPACT_MIN
+        assert q._n_cancelled == 19        # still lazy
+        assert len(q) == 1
+        assert q.pop().t == 19.0
+
+    def test_counts_survive_random_interleaving(self):
+        rng = random.Random(7)
+        q = IndexedEventQueue()
+        live = {k: [] for k in (FINISH, RECONFIG, ARRIVAL, TICK)}
+        prio = {FINISH: 0, RECONFIG: 1, ARRIVAL: 2, TICK: 3}
+        seq = 0
+        for _ in range(3000):
+            op = rng.random()
+            if op < 0.55:
+                kind = rng.choice([FINISH, RECONFIG, ARRIVAL, TICK])
+                seq += 1
+                ev = _ev(rng.uniform(0, 100), kind, prio=prio[kind],
+                         sub=rng.randrange(4), seq=seq)
+                q.push(ev)
+                live[kind].append(ev)
+            elif op < 0.80:
+                kind = rng.choice([FINISH, RECONFIG, ARRIVAL, TICK])
+                if live[kind]:
+                    ev = live[kind].pop(rng.randrange(len(live[kind])))
+                    ev.cancelled = True
+            else:
+                ev = q.pop()
+                if ev is not None:
+                    live[ev.kind].remove(ev)
+            for kind in live:
+                assert q.count(kind) == len(live[kind])
+            assert len(q) == sum(len(v) for v in live.values())
+        # drain cleanly
+        drained = 0
+        while q.pop() is not None:
+            drained += 1
+        assert drained == sum(len(v) for v in live.values())
+        assert not q.has()
+
+
+class TestKernelHasEvents:
+    def test_kernel_has_events_tracks_ticks(self):
+        from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
+        from repro.fleet import make_fleet
+
+        kernel = EventKernel(make_fleet(["a100"]), SchedulingPolicy())
+        assert not kernel.has_events(TICK)
+        ev = kernel.schedule_tick(5.0)
+        assert kernel.has_events(TICK)
+        assert kernel.next_event_time(TICK) == 5.0
+        kernel.cancel(ev)
+        assert not kernel.has_events(TICK)
+        assert kernel.next_event_time(TICK) is None
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,148 @@
+"""Trace-scale replay: streamed runs equal materialized runs, flat memory.
+
+``EventKernel.run(jobs, stream=True)`` + the lazy trace iterators are the
+million-event path (benchmarks/bench_kernel.py, examples/trace_replay.py).
+These tests pin its contract at test scale:
+
+* a streamed run produces **bitwise-identical** fleet metrics to the same
+  trace materialized as a list up front,
+* memory stays flat — no per-run records with ``record_runs=False``, the
+  replay buffer compacts below its cap, the flight recorder streams to a
+  JSONL sink instead of buffering,
+* the stream validators reject what the materialized path rejects
+  (duplicate names, unsorted arrivals).
+"""
+
+import pytest
+
+from repro.core.scheduler.kernel import _REPLAY_COMPACT_AT, EventKernel
+from repro.fleet import (FleetPolicy, iter_jobs_from_trace, jobs_from_trace,
+                         make_fleet, make_router, synthetic_alibaba_rows)
+from repro.obs import Tracer, read_jsonl
+
+N_JOBS = 300
+SEED = 11
+RATE = 2.0
+SHAPE = ["a100", "a100", "h100", "h100"]
+
+
+def _rows():
+    return synthetic_alibaba_rows(N_JOBS, seed=SEED, rate_per_s=RATE)
+
+
+def _run(stream: bool, record_runs: bool = True, tracer=None):
+    fleet = make_fleet(SHAPE, record_runs=record_runs)
+    policy = FleetPolicy(make_router("energy_aware", seed=SEED))
+    kernel = EventKernel(fleet, policy, tracer=tracer)
+    if stream:
+        jobs = iter_jobs_from_trace(iter(_rows()))
+    else:
+        jobs = jobs_from_trace(_rows())
+    metrics = kernel.run(jobs, stream=stream)
+    return kernel, policy, metrics
+
+
+class TestStreamedEqualsMaterialized:
+    def test_metrics_bitwise_identical(self):
+        _, _, eager = _run(stream=False)
+        kernel, _, lazy = _run(stream=True)
+        assert lazy.n_jobs == eager.n_jobs == N_JOBS
+        assert kernel.n_jobs_seen == N_JOBS
+        assert lazy.makespan == eager.makespan
+        assert lazy.energy_j == eager.energy_j
+        assert lazy.mean_jct == eager.mean_jct
+        assert lazy.p99_jct == eager.p99_jct
+        assert lazy.n_reconfigs == eager.n_reconfigs
+        assert lazy.gated_seconds == eager.gated_seconds
+
+    def test_per_device_summaries_identical(self):
+        _, _, eager = _run(stream=False)
+        _, _, lazy = _run(stream=True)
+        for de, dl in zip(eager.per_device, lazy.per_device):
+            assert de.summary() == dl.summary()
+
+    def test_streaming_tail_fed_during_run(self):
+        _, policy, metrics = _run(stream=True)
+        assert policy.jct_tail.count == N_JOBS
+        assert metrics.p99_jct > 0.0
+        assert metrics.p99_jct >= metrics.mean_jct
+
+
+class TestFlatMemory:
+    def test_record_runs_false_retains_nothing(self):
+        kernel, _, metrics = _run(stream=True, record_runs=False)
+        assert metrics.records == []
+        assert all(not dev.records for dev in kernel.devices)
+        # ...while the aggregate facts survive
+        assert metrics.n_jobs == N_JOBS and metrics.energy_j > 0.0
+
+    def test_replay_buffer_stays_bounded(self):
+        kernel, _, _ = _run(stream=True, record_runs=False)
+        assert len(kernel._times) < _REPLAY_COMPACT_AT
+        assert kernel.n_events >= 2 * N_JOBS   # arrivals + finishes
+
+    def test_side_heaps_drained_after_run(self):
+        """Popped events must be physically pruned from the side heaps as
+        the run progresses — a fully-drained queue that still held every
+        Event tuple would retain O(events) memory (the 684 MB regression
+        this pins: fleet runs rarely cancel, so compaction alone never
+        fired)."""
+        kernel, _, _ = _run(stream=True, record_runs=False)
+        assert not kernel.events.has()
+        assert all(not side for side in kernel.events._by_kind.values())
+        assert all(not side for side in kernel.events._by_sub.values())
+
+    def test_one_arrival_staged_at_a_time(self):
+        fleet = make_fleet(SHAPE, record_runs=False)
+        policy = FleetPolicy(make_router("energy_aware", seed=SEED))
+        kernel = EventKernel(fleet, policy)
+        seen = []
+        orig = kernel._stage_next_arrival
+
+        def spy():
+            orig()
+            seen.append(kernel.events.count("arrival"))
+
+        kernel._stage_next_arrival = spy
+        kernel.run(iter_jobs_from_trace(iter(_rows())), stream=True)
+        assert seen and max(seen) <= 1
+
+    def test_tracer_sink_streams_to_disk(self, tmp_path):
+        sink = tmp_path / "replay.jsonl"
+        tracer = Tracer(sink=str(sink))
+        _, _, metrics = _run(stream=True, record_runs=False, tracer=tracer)
+        tracer.close()
+        assert tracer.records == []            # nothing buffered in RAM
+        with pytest.raises(RuntimeError):
+            tracer.write_jsonl(str(tmp_path / "other.jsonl"))
+        header, records = read_jsonl(str(sink))
+        assert len(records) >= N_JOBS          # at least one span per job
+        # finish() meta (stamped at close) folded back into the header
+        assert header["meta"]["policy"] == "energy_aware"
+        assert header["meta"]["t_end"] == metrics.makespan
+
+
+class TestStreamValidation:
+    def test_duplicate_names_rejected(self):
+        rows = _rows()[:10]
+        jobs = jobs_from_trace(rows) + jobs_from_trace(rows[-1:])
+        jobs[-1].arrival = jobs[-2].arrival + 1.0
+        fleet = make_fleet(SHAPE)
+        kernel = EventKernel(fleet,
+                             FleetPolicy(make_router("energy_aware")))
+        with pytest.raises(ValueError, match="duplicate job names"):
+            kernel.run(iter(jobs), stream=True)
+
+    def test_unsorted_arrivals_rejected(self):
+        jobs = jobs_from_trace(_rows()[:10])
+        jobs[5].arrival = 0.0                  # break monotonicity
+        fleet = make_fleet(SHAPE)
+        kernel = EventKernel(fleet,
+                             FleetPolicy(make_router("energy_aware")))
+        with pytest.raises(ValueError, match="sorted by arrival"):
+            kernel.run(iter(jobs), stream=True)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))
