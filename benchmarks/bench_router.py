@@ -1,0 +1,200 @@
+"""Fleet-dispatch throughput: dispatches/sec with the routing index.
+
+The fleet's per-dispatch hot path is ``CostRouter.rank`` — the seed
+implementation full-sorts the pool and re-derives every device's cost
+features per call, O(devices) per dispatch, which is what stalls the
+fleet axis at the hundreds of devices the ROADMAP's trace-scale policy
+comparison needs.  PR 8's :class:`repro.fleet.index.RoutingIndex` makes
+that O(k log N) via epoch-keyed caches and lazy heap selection.
+
+Two arms run the identical Alibaba-shaped workload on the production
+kernel at 16/64/256 devices, for both cost routers:
+
+* ``indexed`` — the routing index (the default),
+* ``seed``    — ``router.use_index = False``, the pre-index full-sort
+  rank preserved verbatim inside ``CostRouter.rank``
+  (``legacy_kernel.py``-style: the baseline is the real seed code, not a
+  reconstruction).
+
+Both arms are asserted to agree bit-for-bit on the sim outcome (makespan,
+Joules, mean JCT, event and dispatch counts) — the speedup must come from
+the index, never from simulating something cheaper.  Dispatches/sec is
+``FleetPolicy.dispatch_job`` calls over the wall-clock spent inside
+``FleetPolicy.dispatch`` *net of device-state advancement* (the lazy
+``sync`` replay and run starts bill the simulated hardware's energy and
+memory integrals — O(devices) physics identical in both arms, orthogonal
+to routing, and large enough at 256 devices to mask the rank path this
+bench isolates; end-to-end run wall is reported alongside).  The headline
+gate, enforced here and regression-watched via ``BENCH_router.json``:
+indexed >= 5x seed dispatches/sec at 256 devices, both routers.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.scheduler.kernel import EventKernel
+from repro.fleet import (FleetPolicy, jobs_from_trace, make_fleet,
+                         make_router, synthetic_alibaba_rows)
+
+SEED = 11
+SIZES = (16, 64, 256)
+ROUTERS = ("best_fit", "energy_aware")
+#: submissions/sec per device — holds fleet load well under one job per
+#: device at every size: enough concurrency that ranking sees busy
+#: devices, light enough that the placement ladder succeeds on the first
+#: candidates (a saturated fleet benchmarks plan_place failure storms —
+#: identical in both arms — not routing)
+RATE_PER_DEVICE = 0.06
+JOBS_PER_DEVICE = 4
+MIN_JOBS = 256          # floor so the small tiers still time real work
+
+MIN_SPEEDUP = 5.0       # indexed vs seed rank path, 256-device tier
+GATE_SIZE = 256
+
+
+class _SimTimedKernel(EventKernel):
+    """EventKernel metering wall-clock spent advancing device state (lazy
+    ``sync`` replay + run starts), so dispatch timing can exclude it."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.sim_wall = 0.0
+        self._sim_depth = 0   # start() calls sync(); count the outer frame
+
+    def _metered(self, fn, *args, **kwargs):
+        self._sim_depth += 1
+        t0 = time.perf_counter()
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            self._sim_depth -= 1
+            if self._sim_depth == 0:
+                self.sim_wall += time.perf_counter() - t0
+
+    def sync(self, device):
+        return self._metered(super().sync, device)
+
+    def start(self, device, job, partition, setup_s: float = 0.0):
+        return self._metered(super().start, device, job, partition,
+                             setup_s=setup_s)
+
+
+class _TimedFleetPolicy(FleetPolicy):
+    """FleetPolicy with the dispatch path under a wall-clock integral.
+
+    The kernel calls ``dispatch`` once per event; timing the whole run
+    would dilute the rank speedup with event plumbing and device-sim
+    costs identical in both arms.  The ``perf_counter`` reads per call
+    land on both arms equally.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.dispatch_wall = 0.0
+
+    def dispatch(self, kernel):
+        t0 = time.perf_counter()
+        sim0 = kernel.sim_wall
+        try:
+            return super().dispatch(kernel)
+        finally:
+            self.dispatch_wall += (time.perf_counter() - t0
+                                   - (kernel.sim_wall - sim0))
+
+
+def _shape(n_devices: int) -> list[str]:
+    half = n_devices // 2
+    return ["a100"] * half + ["h100"] * (n_devices - half)
+
+
+def _workload(n_devices: int):
+    """Fresh jobs per run — the sim mutates estimates in place."""
+    n_jobs = max(MIN_JOBS, JOBS_PER_DEVICE * n_devices)
+    rows = synthetic_alibaba_rows(n_jobs, seed=SEED,
+                                  rate_per_s=RATE_PER_DEVICE * n_devices)
+    return jobs_from_trace(rows)
+
+
+def _run_once(router_name: str, n_devices: int, use_index: bool):
+    jobs = _workload(n_devices)
+    fleet = make_fleet(_shape(n_devices), record_runs=False)
+    router = make_router(router_name, seed=SEED)
+    router.use_index = use_index
+    policy = _TimedFleetPolicy(router)
+    kernel = _SimTimedKernel(fleet, policy)
+    t0 = time.perf_counter()
+    metrics = kernel.run(jobs)
+    wall = time.perf_counter() - t0
+    return policy, kernel, metrics, wall
+
+
+def run(csv_rows: list) -> dict:
+    # warm the process-wide caches (compiled transition graphs,
+    # reachability tables, imports) off the clock — otherwise the first
+    # timed arm eats them and the small tiers report compile time
+    for name in ROUTERS:
+        _run_once(name, 4, True)
+        _run_once(name, 4, False)
+    print("\n=== Fleet-dispatch throughput: routing index vs seed rank, "
+          f"Alibaba-shaped replay (seed {SEED}) ===")
+    print(f"{'devices':<8} {'router':<13} {'arm':<8} {'dispatches':>10} "
+          f"{'rank_s':>8} {'disp/s':>10}")
+    extra: dict = {"sizes": {}}
+    gate_failures = []
+    for n in SIZES:
+        tier: dict = {}
+        extra["sizes"][str(n)] = tier
+        for name in ROUTERS:
+            p_idx, k_idx, m_idx, wall_idx = _run_once(name, n, True)
+            p_seed, k_seed, m_seed, wall_seed = _run_once(name, n, False)
+            # the speedup is only meaningful if both arms simulated the
+            # same thing — bitwise, not approximately
+            assert k_idx.n_events == k_seed.n_events, \
+                f"{n}x{name}: event counts diverge"
+            assert p_idx.n_dispatch_calls == p_seed.n_dispatch_calls, \
+                f"{n}x{name}: dispatch counts diverge"
+            assert m_idx.makespan == m_seed.makespan, \
+                f"{n}x{name}: makespan diverges"
+            assert m_idx.energy_j == m_seed.energy_j, \
+                f"{n}x{name}: Joules diverge"
+            assert m_idx.mean_jct == m_seed.mean_jct, \
+                f"{n}x{name}: JCT diverges"
+            dps_idx = p_idx.n_dispatch_calls / p_idx.dispatch_wall
+            dps_seed = p_seed.n_dispatch_calls / p_seed.dispatch_wall
+            speedup = dps_idx / dps_seed
+            print(f"{n:<8} {name:<13} {'indexed':<8} "
+                  f"{p_idx.n_dispatch_calls:>10} "
+                  f"{p_idx.dispatch_wall:>8.2f} {dps_idx:>10.0f}")
+            print(f"{n:<8} {name:<13} {'seed':<8} "
+                  f"{p_seed.n_dispatch_calls:>10} "
+                  f"{p_seed.dispatch_wall:>8.2f} {dps_seed:>10.0f}   "
+                  f"({speedup:.1f}x)")
+            csv_rows.append((f"router.{n}.{name}.dispatch_per_s", 0.0,
+                             f"{dps_idx:.0f}"))
+            tier[name] = {
+                "dispatches": p_idx.n_dispatch_calls,
+                "dispatch_per_s": round(dps_idx),
+                "seed_dispatch_per_s": round(dps_seed),
+                "speedup": round(speedup, 2),
+                "wall_s": round(wall_idx, 3),
+                "seed_wall_s": round(wall_seed, 3),
+                "index_hits": p_idx.router.index.n_hits,
+                "index_misses": p_idx.router.index.n_misses,
+            }
+            if n == GATE_SIZE:
+                # machine-normalized ratio (both arms, one process, one
+                # machine) — the regression-watchable row
+                csv_rows.append((f"router.{n}.{name}.speedup", speedup,
+                                 f"{dps_idx:.0f}disp/s vs {dps_seed:.0f}"))
+                if speedup < MIN_SPEEDUP:
+                    gate_failures.append(
+                        f"{name}@{n}: {speedup:.2f}x < {MIN_SPEEDUP}x")
+    print(f"\n{GATE_SIZE}-device tier gate: indexed >= {MIN_SPEEDUP}x the "
+          f"seed rank path on dispatches/sec")
+    assert not gate_failures, "; ".join(gate_failures)
+    return extra
+
+
+if __name__ == "__main__":
+    run([])

@@ -72,6 +72,12 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
     "kernel": [
         ("kernel.100k.speedup", "higher"),
     ],
+    # indexed-vs-seed rank path timed back-to-back in one process on the
+    # same workload — another machine-normalized ratio
+    "router": [
+        ("router.256.best_fit.speedup", "higher"),
+        ("router.256.energy_aware.speedup", "higher"),
+    ],
 }
 
 

@@ -20,7 +20,8 @@ from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
                         bench_fig4_ml, bench_fleet, bench_kernel,
                         bench_kernels, bench_obs, bench_planner,
                         bench_predictor, bench_reachability, bench_roofline,
-                        bench_serving, bench_slo, bench_tpu_pod)
+                        bench_router, bench_serving, bench_slo,
+                        bench_tpu_pod)
 
 #: Bump when the BENCH_<name>.json layout changes incompatibly;
 #: ``benchmarks/compare.py`` refuses baselines from another schema.
@@ -42,6 +43,7 @@ BENCHES = {
     "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
     "obs": bench_obs.run,                     # flight-recorder overhead bound
     "kernel": bench_kernel.run,               # event-kernel events/sec gates
+    "router": bench_router.run,               # routing index dispatches/sec
 }
 
 

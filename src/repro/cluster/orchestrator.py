@@ -26,7 +26,7 @@ from __future__ import annotations
 import functools
 from typing import Iterable, Mapping, Sequence
 
-from repro.cluster.policies import ZoneRouter
+from repro.cluster.policies import ZoneRouter, refresh_zone_prices
 from repro.cluster.zones import Zone, checkpoint_movement_s
 from repro.core.planner import Migrate
 from repro.core.scheduler.events import EARLY_RESTART, OOM, DeviceSim
@@ -36,7 +36,6 @@ from repro.core.scheduler.metrics import ClusterMetrics, ZoneMetrics
 from repro.fleet.devices import WAKE_LATENCY_S
 from repro.fleet.energy import PricedEnergyIntegrator
 from repro.fleet.orchestrator import FleetPolicy, drain_queue, gate_idle_devices
-from repro.fleet.router import CostRouter
 from repro.obs.counters import TailStats
 
 
@@ -126,9 +125,7 @@ class ClusterPolicy(SchedulingPolicy):
         epoch = kernel.capacity_epoch
         attempt = functools.partial(self._dispatch_one, kernel)
         if epoch != self._drain_epoch or self._fresh:
-            for zone in self.zones:
-                if isinstance(zone.router, CostRouter):
-                    zone.router.price_per_j = zone.tariff.price_at(kernel.t)
+            refresh_zone_prices(self.zones, kernel.t)
             if epoch != self._drain_epoch:
                 self._drain_epoch = epoch
                 self._fresh.clear()

@@ -27,6 +27,24 @@ from repro.core.planner.cost import (
     CostTerms,
 )
 from repro.core.scheduler.job import Job
+from repro.fleet.router import CostRouter
+
+
+def refresh_zone_prices(zones: Sequence[Zone], t: float) -> None:
+    """Push each zone's instantaneous tariff into its device router before
+    a dispatch round, so cost models weighing ``energy_price`` stay
+    tariff-aware.
+
+    Deliberately cheap to call every round: the fleet's routing index
+    factors ``price_per_j`` out of its cached device terms (the tariff
+    scales the ``energy_price`` feature at rank time), so this cluster-wide
+    refresh invalidates nothing — only real device-state changes (start /
+    finish / gate, via the kernel epoch) do.
+    """
+    for zone in zones:
+        router = zone.router
+        if isinstance(router, CostRouter):
+            router.price_per_j = zone.tariff.price_at(t)
 
 
 def zone_cost_terms(

@@ -328,6 +328,12 @@ class EventKernel:
     lighter device type and drives everything through ticks + reconfigs.
     """
 
+    #: this kernel maintains real per-device epochs and the ``awake_idle``
+    #: set, so the fleet may bind a :class:`repro.fleet.index.RoutingIndex`
+    #: to it; the legacy benchmark kernel (fresh epochs on every read)
+    #: lacks the marker and keeps the seed rank path.
+    supports_routing_index = True
+
     def __init__(self, devices: Sequence, policy: SchedulingPolicy,
                  tracer=None) -> None:
         if not devices:
@@ -350,6 +356,14 @@ class EventKernel:
         #: same, per device — lets a policy retry a previously-unplaceable
         #: job against only the devices that changed since it last failed
         self.device_epoch = [0] * len(self.devices)
+        #: kernel indices of devices that are awake (not power-gated) and
+        #: fully idle — maintained on start/finish so consolidation gating
+        #: (``gate_idle_devices``) reads a set instead of rescanning the
+        #: fleet on every dispatch round
+        self.awake_idle = {i for i, d in enumerate(self.devices)
+                           if not getattr(d, "gated", False)
+                           and not d.has_running}
+        self._pool_cache: dict[int, tuple] = {}  # id(seq) -> (seq, indices)
         #: kernel loop iterations (events processed); benchmark currency
         self.n_events = 0
         #: arrivals admitted (staged events + queue-seeded) — the job count
@@ -407,6 +421,17 @@ class EventKernel:
         if device is not None:
             self.device_epoch[self._dev_index[id(device)]] += 1
 
+    def pool_indices(self, devices: Sequence) -> frozenset:
+        """Kernel indices of a stable device subset (a cluster zone's
+        pool), cached by list identity — the kept reference pins ``id()``
+        so the cache entry can never be aliased by a recycled address."""
+        hit = self._pool_cache.get(id(devices))
+        if hit is not None and hit[0] is devices:
+            return hit[1]
+        indices = frozenset(self._dev_index[id(d)] for d in devices)
+        self._pool_cache[id(devices)] = (devices, indices)
+        return indices
+
     # -- lazy device advancement -------------------------------------------
 
     def sync(self, device) -> None:
@@ -447,8 +472,9 @@ class EventKernel:
         """Start ``job`` on ``device`` and register its finish event."""
         self.sync(device)   # lazy mode: the device may lag the clock
         run = device.start(job, partition, setup_s=setup_s)
-        self.push(run.t_end, FINISH, device,
-                  sub=self._dev_index[id(device)], seq=run.seq)
+        i = self._dev_index[id(device)]
+        self.push(run.t_end, FINISH, device, sub=i, seq=run.seq)
+        self.awake_idle.discard(i)
         self.bump_epoch(device)
         if self.tracer is not None:
             profile = partition.profile
@@ -566,6 +592,8 @@ class EventKernel:
                 # the golden-pinned order)
                 self.sync(dev)
                 run = dev.pop_next_finish()
+                if not dev.has_running:
+                    self.awake_idle.add(self._dev_index[id(dev)])
                 self._record_time(ev.t)
                 if not lazy:
                     self.sync_all()

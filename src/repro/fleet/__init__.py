@@ -23,18 +23,20 @@ from repro.fleet.arrivals import (diurnal_arrivals, iter_alibaba_csv,
 from repro.fleet.devices import make_device, make_fleet
 from repro.fleet.energy import (FleetCostSummary, FleetEnergyIntegrator,
                                 PricedEnergyIntegrator)
+from repro.fleet.index import RoutingIndex
 from repro.fleet.orchestrator import (FleetMetrics, FleetOrchestrator,
                                       FleetPolicy, run_fleet)
-from repro.fleet.router import (BestFitRouter, EnergyAwareRouter,
+from repro.fleet.router import (BestFitRouter, CostRouter, EnergyAwareRouter,
                                 RandomRouter, Router, RoundRobinRouter,
                                 device_cost_terms, make_router)
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "ArrivalForecast",
-    "BestFitRouter", "EnergyAwareRouter", "FleetCostSummary",
+    "BestFitRouter", "CostRouter", "EnergyAwareRouter", "FleetCostSummary",
     "FleetEnergyIntegrator", "FleetMetrics", "FleetOrchestrator",
     "FleetPolicy", "PricedEnergyIntegrator", "RandomRouter", "Router",
-    "RoundRobinRouter", "device_cost_terms", "diurnal_arrivals",
+    "RoundRobinRouter", "RoutingIndex", "device_cost_terms",
+    "diurnal_arrivals",
     "iter_alibaba_csv", "iter_jobs_from_trace",
     "iter_synthetic_alibaba_rows", "jobs_from_trace", "load_alibaba_csv",
     "make_device", "make_fleet", "make_router", "poisson_arrivals",

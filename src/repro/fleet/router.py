@@ -19,7 +19,7 @@ remaining optimization surface):
 from __future__ import annotations
 
 import random
-from typing import Sequence
+from typing import Iterator, Sequence
 
 from repro.core.planner.cost import (BEST_FIT_DEVICE_COST, CostModel,
                                      CostTerms, ENERGY_AWARE_DEVICE_COST,
@@ -120,9 +120,22 @@ class CostRouter(Router):
     cost_model: CostModel
     price_per_j: float = 0.0
     stateless_rank = True
+    #: a :class:`repro.fleet.index.RoutingIndex` bound by the fleet policy
+    #: once the kernel is known; None ranks via the seed full-sort below
+    index = None
+    #: escape hatch: False forces the seed path even with an index bound —
+    #: the pre-index baseline arm of ``benchmarks/bench_router.py``
+    use_index = True
 
     def rank(self, job: Job, devices: Sequence[DeviceSim]
-             ) -> list[DeviceSim]:
+             ) -> list[DeviceSim] | Iterator[DeviceSim]:
+        if self.index is not None and self.use_index:
+            ranked = self.index.rank(self, job, devices)
+            if ranked is not None:  # None: a pool the index's kernel
+                return ranked       # doesn't know — the sort handles any
+        # -- the seed full-sort path, preserved verbatim: unbound routers
+        #    (plain lists of devices, no kernel) rank through it, and the
+        #    router benchmark pins the index's speedup against it --
         feas = self.feasible(job, devices)
         if len(feas) <= 1:
             # ordering a singleton is free — and the changed-device retry

@@ -212,6 +212,23 @@ class TestTracerNoopParity:
                              make_router("best_fit"), jobs, tracer=tracer)
         assert go(None) == go(Tracer())
 
+    def test_fleet_metrics_unperturbed_with_index_counters(self):
+        """PR 8's routing index emits per-dispatch counters when traced;
+        tracer=None must stay the exact same sim, and the traced run must
+        actually carry the index's counter tracks."""
+        def go(tracer):
+            from repro.core.scheduler.job import rodinia_job
+            jobs = [rodinia_job("srad", i) for i in range(6)]
+            return run_fleet(make_fleet(["a100", "h100"]),
+                             make_router("energy_aware"), jobs,
+                             tracer=tracer)
+        tracer = Tracer()
+        assert go(None) == go(tracer)
+        counters = {r["name"] for r in tracer.records
+                    if r.get("type") == "counter"}
+        assert {"router.candidates", "router.index_hit",
+                "router.index_skip"} <= counters
+
 
 # ---------------------------------------------------------------------------
 # trace round-trip + planner audit

@@ -1,0 +1,245 @@
+"""PR 8: the fleet routing index — bitwise parity with the seed rank path.
+
+The contract under test is absolute: :class:`repro.fleet.index.RoutingIndex`
+must reproduce the seed full-sort ``CostRouter.rank`` order *bitwise* — the
+same devices, identically ordered, across arbitrary fleet shapes, placement
+churn, power gating, bare epoch bumps, tariff refreshes and subset pools —
+while ``stateless_rank=False`` routers (round-robin, random) never touch
+the index at all.
+"""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import (ZoneTariff, cluster_workload, make_zone,
+                           make_zone_router, run_cluster)
+from repro.core.planner.cost import (BEST_FIT_DEVICE_COST,
+                                     ENERGY_AWARE_DEVICE_COST)
+from repro.core.scheduler.job import rodinia_job
+from repro.core.scheduler.kernel import EventKernel
+from repro.fleet import (FleetPolicy, RoutingIndex, device_cost_terms,
+                         jobs_from_trace, make_fleet, make_router, run_fleet,
+                         synthetic_alibaba_rows)
+from repro.fleet.index import _compile_device_cost
+from repro.fleet.orchestrator import gate_idle_devices
+from repro.obs import Tracer
+
+SHAPES = (
+    ["a100"] * 4,
+    ["a100", "h100"] * 3,
+    ["h100"] * 2 + ["a100"] * 5,
+)
+
+
+def _jobs(n: int, seed: int = 3, rate: float = 1.0):
+    return jobs_from_trace(synthetic_alibaba_rows(n, seed=seed,
+                                                  rate_per_s=rate))
+
+
+def _assert_rank_equal(router, job, pool) -> None:
+    """Indexed rank == seed full-sort rank: same device objects, same
+    order (name equality alone could hide aliasing — compare identity)."""
+    router.use_index = True
+    got = list(router.rank(job, pool))
+    router.use_index = False
+    want = list(router.rank(job, pool))
+    router.use_index = True
+    assert [d.name for d in got] == [d.name for d in want]
+    for a, b in zip(got, want):
+        assert a is b
+
+
+class TestIndexedRankParity:
+    @settings(max_examples=12, deadline=None)
+    @given(rnd=st.randoms(),
+           router_name=st.sampled_from(["best_fit", "energy_aware"]))
+    def test_order_matches_seed_sort_under_mutation(self, rnd, router_name):
+        """The property: after every mutation a live fleet can undergo —
+        placements, gates, wakes, bare epoch bumps, tariff moves, warm
+        re-ranks — the indexed order equals the seed sort, on the full
+        pool and on arbitrary sub-pools."""
+        fleet = make_fleet(list(rnd.choice(SHAPES)))
+        router = make_router(router_name, seed=0)
+        policy = FleetPolicy(router)
+        kernel = EventKernel(fleet, policy)
+        router.index = RoutingIndex(kernel)
+        jobs = _jobs(20, seed=rnd.randrange(1000))
+        for _ in range(20):
+            op = rnd.randrange(6)
+            if op == 0:
+                policy.dispatch_job(kernel, rnd.choice(jobs))
+            elif op == 1:
+                dev = rnd.choice(fleet)
+                if not dev.gated and not dev.has_running:
+                    kernel.sync(dev)
+                    dev.gate()
+                    kernel.bump_epoch(dev)
+            elif op == 2:
+                dev = rnd.choice(fleet)
+                if dev.gated:
+                    dev.ungate()
+                    kernel.bump_epoch(dev)
+            elif op == 3:
+                kernel.bump_epoch(rnd.choice(fleet))
+            elif op == 4:
+                router.price_per_j = rnd.random() * 1e-4
+            # op == 5: no mutation — the pure warm-cache re-rank
+            probe = rnd.choice(jobs)
+            if rnd.random() < 0.6:
+                pool = fleet
+            else:
+                pool = rnd.sample(fleet, rnd.randint(1, len(fleet)))
+            _assert_rank_equal(router, probe, pool)
+
+    def test_foreign_pool_falls_back_to_seed_sort(self):
+        """A pool holding a device the kernel does not know cannot be
+        index-served; ``index.rank`` reports None and the router's seed
+        sort handles it."""
+        fleet = make_fleet(["a100"] * 3)
+        stranger = make_fleet(["h100"])[0]
+        router = make_router("best_fit")
+        kernel = EventKernel(fleet, FleetPolicy(router))
+        router.index = RoutingIndex(kernel)
+        job = rodinia_job("gaussian")
+        pool = [fleet[0], stranger, fleet[2]]
+        assert router.index.rank(router, job, pool) is None
+        _assert_rank_equal(router, job, pool)
+
+    def test_compiled_cost_bitwise_matches_cost_model(self):
+        """The exec-specialized cost function returns the exact tuple
+        ``CostModel.cost(device_cost_terms(...))`` does — float for
+        float, not approximately."""
+        fleet = make_fleet(["a100", "h100"])
+        job = rodinia_job("srad")
+        for model in (BEST_FIT_DEVICE_COST, ENERGY_AWARE_DEVICE_COST):
+            fn = _compile_device_cost(model)
+            for dev in fleet:
+                t = device_cost_terms(job, dev, price_per_j=0.37 / 3.6e6)
+                assert fn(t.wake_s, t.mem_waste_gb, t.free_after_gb,
+                          t.reach_norm, t.compute_deficit, t.load,
+                          t.idle_power_w, t.energy_price) == model.cost(t)
+
+    def test_terms_snapshot_matches_device_cost_terms(self):
+        """The epoch-keyed snapshot holds the exact device-dependent
+        floats ``device_cost_terms`` derives, including after a
+        placement perturbs the fleet."""
+        fleet = make_fleet(["a100", "a100", "h100"])
+        router = make_router("best_fit")
+        policy = FleetPolicy(router)
+        kernel = EventKernel(fleet, policy)
+        job = rodinia_job("euler3d")
+        assert policy.dispatch_job(kernel, job) is not None
+        idx = router.index
+        probe = rodinia_job("gaussian")
+        est = probe.est_mem_gb
+        for i, dev in enumerate(fleet):
+            wake_s, free_gb, reach_norm, load = idx.terms_snapshot(i, dev)
+            t = device_cost_terms(probe, dev)
+            assert wake_s == t.wake_s
+            assert reach_norm == t.reach_norm
+            assert load == t.load
+            prof_mem = t.mem_waste_gb + est
+            assert free_gb - prof_mem == t.free_after_gb
+
+    def test_warm_rerank_hits_the_snapshot_cache(self):
+        fleet = make_fleet(["a100"] * 4)
+        router = make_router("best_fit")
+        kernel = EventKernel(fleet, FleetPolicy(router))
+        router.index = RoutingIndex(kernel)
+        job = rodinia_job("gaussian")
+        list(router.rank(job, fleet))
+        idx = router.index
+        misses = idx.n_misses
+        assert misses > 0
+        hits = idx.n_hits
+        list(router.rank(job, fleet))
+        assert idx.n_misses == misses   # nothing moved: no recompute
+        assert idx.n_hits > hits
+
+    def test_stateful_routers_never_bind_an_index(self):
+        """round_robin / random rank statefully (rotation, RNG) — the
+        index must not intercept them, and the binding logic must not
+        attach one."""
+        for name in ("round_robin", "random"):
+            fleet = make_fleet(["a100", "a100"])
+            router = make_router(name, seed=2)
+            policy = FleetPolicy(router)
+            kernel = EventKernel(fleet, policy)
+            assert policy.dispatch_job(kernel, rodinia_job("gaussian")) \
+                is not None
+            assert getattr(router, "index", None) is None
+
+
+class TestEndToEndParity:
+    @pytest.mark.parametrize("name", ["best_fit", "energy_aware"])
+    def test_fleet_metrics_bitwise_equal(self, name):
+        def go(use_index):
+            router = make_router(name, seed=1)
+            router.use_index = use_index
+            return run_fleet(make_fleet(["a100", "a100", "h100"]), router,
+                             _jobs(40, seed=5))
+        assert go(True) == go(False)
+
+    def test_cluster_metrics_bitwise_equal(self):
+        def go(use_index):
+            tariff = ZoneTariff("tou", 0.05, 0.25, period_s=200.0)
+            zones = [
+                make_zone("us", ["a100", "a100"], tariff),
+                make_zone("eu", ["h100", "a100"], tariff, phase_s=100.0),
+            ]
+            for z in zones:
+                z.router.use_index = use_index
+            jobs, origin = cluster_workload(
+                zones, jobs_per_zone=12, period_s=200.0, peak_rate=0.6,
+                trough_rate=0.1, seed=9)
+            return run_cluster(zones, make_zone_router("price_greedy"),
+                               jobs, origin=origin)
+        assert go(True) == go(False)
+
+
+class TestAwakeIdleSet:
+    def test_invariant_after_consolidating_run(self):
+        fleet = make_fleet(["a100"] * 3)
+        policy = FleetPolicy(make_router("energy_aware"))
+        kernel = EventKernel(fleet, policy)
+        kernel.run(_jobs(24, seed=2, rate=1.5))
+        assert kernel.awake_idle == {
+            i for i, d in enumerate(fleet)
+            if not d.gated and not d.has_running}
+        # energy_aware consolidates: a drained fleet is fully gated
+        assert kernel.awake_idle == set()
+        assert all(d.gated for d in fleet)
+
+    def test_invariant_after_non_gating_run(self):
+        fleet = make_fleet(["a100", "h100"])
+        policy = FleetPolicy(make_router("best_fit"))
+        kernel = EventKernel(fleet, policy)
+        kernel.run(_jobs(16, seed=6, rate=1.0))
+        # best_fit never gates: everything idle stays awake-idle
+        assert kernel.awake_idle == set(range(len(fleet)))
+
+    def test_gate_idle_devices_respects_subset_pools(self):
+        """The cluster layer gates per zone: only the handed sub-pool may
+        be touched, exactly as the seed full-scan behaved."""
+        fleet = make_fleet(["a100"] * 4)
+        kernel = EventKernel(fleet, FleetPolicy(make_router("energy_aware")))
+        gate_idle_devices(kernel, fleet[:2])
+        assert [d.gated for d in fleet] == [True, True, False, False]
+        assert kernel.awake_idle == {2, 3}
+        gate_idle_devices(kernel, fleet)
+        assert all(d.gated for d in fleet)
+        assert kernel.awake_idle == set()
+
+
+class TestIndexObservability:
+    def test_counters_flow_through_the_tracer(self):
+        tracer = Tracer()
+        run_fleet(make_fleet(["a100", "a100"]), make_router("best_fit"),
+                  _jobs(8, seed=4), tracer=tracer)
+        names = {r["name"] for r in tracer.records
+                 if r.get("type") == "counter"}
+        assert {"router.candidates", "router.index_hit",
+                "router.index_skip"} <= names
