@@ -1,0 +1,133 @@
+"""The elasticity closed loop: scale-down Joules and plan-ahead carving.
+
+Two CI gates for the capabilities ISSUE 9 closes:
+
+* **Scale-down** — bursty diurnal serving (sharp peaks, long troughs) on
+  an A100, SLO-gauge growth with and without ``scale_down_ticks``.  The
+  shrink arm must meet the same 6s p99 TTFT SLO as PR 5's slo gauge *and*
+  finish at strictly lower Joules: fissioning the fused slice back during
+  troughs surrenders compute the decode loop wasn't using, so the saved
+  watt-seconds outrun the extra makespan the smaller slices cost.
+
+* **Plan-ahead** — scheme A's homogeneous carve with the k-step beam
+  (``plan_ahead=8``) versus the greedy per-slice loop it replaced, across
+  every fig-4 Rodinia mix.  The beam always scores the greedy chain as a
+  candidate, so the gate is structural: throughput >= greedy and
+  makespan <= greedy on every mix, no exceptions.
+"""
+
+from __future__ import annotations
+
+from benchmarks.mixes import RODINIA_MIXES, rodinia_mix
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.policies import run_scheme_a
+from repro.serving.sim import (ServingConfig, ServingMetrics,
+                               diurnal_requests, run_serving)
+
+# -- scale-down arm ---------------------------------------------------------
+N_REQUESTS = 200
+PEAK_RATE = 1.5        # req/s at the diurnal crest
+TROUGH_RATE = 0.05     # req/s in the trough — sustained headroom
+PERIOD_S = 200.0
+SEED = 7
+SCALE_DOWN_TICKS = 30
+
+BASE = dict(policy="dynamic", n_engines=2, gauge="slo",
+            use_prediction=False)
+SLO_TTFT_S = ServingConfig(**BASE).slo_ttft_s
+
+# -- plan-ahead arm ---------------------------------------------------------
+BEAM_WIDTH = 8
+
+
+def _requests():
+    return diurnal_requests(N_REQUESTS, peak_rate_per_s=PEAK_RATE,
+                            trough_rate_per_s=TROUGH_RATE,
+                            period_s=PERIOD_S, seed=SEED)
+
+
+def run(csv_rows: list) -> dict:
+    print(f"\n=== engine scale-down: {N_REQUESTS} diurnal requests "
+          f"(peak {PEAK_RATE}/s, trough {TROUGH_RATE}/s, period "
+          f"{PERIOD_S:.0f}s, seed {SEED}) on a100 ===")
+    arms: dict[str, ServingMetrics] = {
+        "slo": run_serving(["a100"], ServingConfig(**BASE), _requests()),
+        "shrink": run_serving(
+            ["a100"],
+            ServingConfig(**BASE, scale_down_ticks=SCALE_DOWN_TICKS),
+            _requests()),
+    }
+    print(f"{'arm':<8} {'p99ttft':>8} {'meets':>6} {'kJ':>8} "
+          f"{'makespan':>9} {'shrinks':>8} {'scaleups':>9}")
+    payload: dict = {"n_requests": N_REQUESTS, "peak_rate_per_s": PEAK_RATE,
+                     "trough_rate_per_s": TROUGH_RATE, "period_s": PERIOD_S,
+                     "seed": SEED, "slo_ttft_s": SLO_TTFT_S,
+                     "scale_down_ticks": SCALE_DOWN_TICKS, "arms": {},
+                     "mixes": {}}
+    for label, m in arms.items():
+        meets = "yes" if m.p99_ttft <= SLO_TTFT_S else "MISS"
+        print(f"{label:<8} {m.p99_ttft:8.2f} {meets:>6} "
+              f"{m.energy_j / 1e3:8.2f} {m.makespan:9.1f} "
+              f"{m.n_shrinks:8d} {m.n_scaleups:9d}")
+        tag = f"elastic.{label}"
+        csv_rows.append((f"{tag}.p99_ttft_s", 0.0, f"{m.p99_ttft:.3f}"))
+        csv_rows.append((f"{tag}.energy_kj", 0.0, f"{m.energy_j / 1e3:.2f}"))
+        payload["arms"][label] = {
+            "p99_ttft_s": m.p99_ttft,
+            "meets_ttft_slo": m.p99_ttft <= SLO_TTFT_S,
+            "energy_j": m.energy_j,
+            "makespan_s": m.makespan,
+            "n_completed": m.n_completed,
+            "n_shrinks": m.n_shrinks,
+            "n_scaleups": m.n_scaleups,
+            "n_reconfigs": m.n_reconfigs,
+        }
+
+    slo, shrink = arms["slo"], arms["shrink"]
+    for label, m in arms.items():
+        assert m.n_completed == N_REQUESTS, (label, m.n_completed)
+        assert m.n_dropped == 0, label
+        assert m.p99_ttft <= SLO_TTFT_S, (
+            f"{label}: must meet the p99 TTFT SLO "
+            f"({m.p99_ttft:.2f}s > {SLO_TTFT_S}s)")
+    assert shrink.n_shrinks >= 1, (
+        "the trough never triggered a shrink — the closed loop is dead")
+    assert shrink.energy_j < slo.energy_j, (
+        f"scale-down must finish at strictly lower Joules than grow-only "
+        f"({shrink.energy_j:.0f}J >= {slo.energy_j:.0f}J)")
+    saved = 1.0 - shrink.energy_j / slo.energy_j
+    csv_rows.append(("elastic.energy_saved_frac", 0.0, f"{saved:.4f}"))
+    payload["energy_saved_frac"] = saved
+    print(f"\nshrink saves {saved:.1%} Joules at the same TTFT SLO "
+          f"({shrink.n_shrinks} fissions, {shrink.n_scaleups} regrows)")
+
+    print(f"\n=== plan-ahead carving vs greedy (scheme A, "
+          f"beam {BEAM_WIDTH}) ===")
+    print(f"{'mix':<5} {'greedy mk':>10} {'beam mk':>10} "
+          f"{'greedy thpt':>12} {'beam thpt':>11}")
+    for name in RODINIA_MIXES:
+        g = run_scheme_a(rodinia_mix(name), MigA100Backend(), A100_POWER,
+                         plan_ahead=0)
+        b = run_scheme_a(rodinia_mix(name), MigA100Backend(), A100_POWER,
+                         plan_ahead=BEAM_WIDTH)
+        print(f"{name:<5} {g.makespan:10.1f} {b.makespan:10.1f} "
+              f"{g.throughput:12.4f} {b.throughput:11.4f}")
+        assert b.throughput >= g.throughput - 1e-9, (
+            f"{name}: plan-ahead throughput {b.throughput:.4f} < greedy "
+            f"{g.throughput:.4f} — the beam's never-worse gate is broken")
+        assert b.makespan <= g.makespan + 1e-9, (
+            f"{name}: plan-ahead makespan {b.makespan:.1f}s > greedy "
+            f"{g.makespan:.1f}s")
+        payload["mixes"][name] = {
+            "greedy_makespan_s": g.makespan, "beam_makespan_s": b.makespan,
+            "greedy_throughput": g.throughput, "beam_throughput": b.throughput,
+        }
+        csv_rows.append((f"elastic.{name}.beam_thpt", 0.0,
+                         f"{b.throughput:.4f}"))
+    print("\nplan-ahead >= greedy on every fig-4 mix")
+    return payload
+
+
+if __name__ == "__main__":
+    run([])

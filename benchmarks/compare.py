@@ -61,6 +61,13 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
         ("slo.h100.slo.energy_kj", "lower"),
         ("slo.h100.slo.goodput_rps", "higher"),
     ],
+    "elastic": [
+        ("elastic.shrink.p99_ttft_s", "lower"),
+        ("elastic.shrink.energy_kj", "lower"),
+        ("elastic.energy_saved_frac", "higher"),
+        ("elastic.Hm1.beam_thpt", "higher"),
+        ("elastic.Hm4.beam_thpt", "higher"),
+    ],
     # the overhead ratio is traced/untraced wall-clock on the same machine
     # in the same process — runner-speed cancels out, so unlike raw
     # microseconds it is stable enough to watch

@@ -16,12 +16,12 @@ import pathlib
 import subprocess
 import sys
 
-from benchmarks import (bench_breakdown, bench_cluster, bench_fig4_general,
-                        bench_fig4_ml, bench_fleet, bench_kernel,
-                        bench_kernels, bench_obs, bench_planner,
-                        bench_predictor, bench_reachability, bench_roofline,
-                        bench_router, bench_serving, bench_slo,
-                        bench_tpu_pod)
+from benchmarks import (bench_breakdown, bench_cluster, bench_elastic,
+                        bench_fig4_general, bench_fig4_ml, bench_fleet,
+                        bench_kernel, bench_kernels, bench_obs,
+                        bench_planner, bench_predictor, bench_reachability,
+                        bench_roofline, bench_router, bench_serving,
+                        bench_slo, bench_tpu_pod)
 
 #: Bump when the BENCH_<name>.json layout changes incompatibly;
 #: ``benchmarks/compare.py`` refuses baselines from another schema.
@@ -40,6 +40,7 @@ BENCHES = {
     "fleet": bench_fleet.run,                 # multi-GPU fleet routing
     "serving": bench_serving.run,             # request-level LLM serving SLOs
     "slo": bench_slo.run,                     # SLO-aware vs reactive growth
+    "elastic": bench_elastic.run,             # scale-down + plan-ahead gates
     "cluster": bench_cluster.run,             # cluster-of-fleets zone routing
     "obs": bench_obs.run,                     # flight-recorder overhead bound
     "kernel": bench_kernel.run,               # event-kernel events/sec gates

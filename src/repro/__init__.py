@@ -1,0 +1,79 @@
+"""Reproduction of "Managing Multi Instance GPUs for High Throughput and
+Energy Savings" — partition-FSM planning, batch/serving/fleet/cluster
+simulation, and a lease-based control plane.
+
+The curated top-level surface (everything in ``__all__``) resolves
+lazily, so ``import repro`` stays dependency-free — the JAX-backed
+engine and the simulators only load when touched.  The front door for
+simulations is :class:`repro.api.RunSpec` + :func:`repro.api.simulate`;
+for live provisioning it is :class:`repro.control.ControlPlane`.
+
+The legacy per-layer entrypoints (``run_serving`` and friends) remain
+supported *in their home modules*; their top-level aliases here are
+deprecated and warn once, steering callers to ``simulate()``.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+#: curated surface: public name -> home module (resolved lazily).
+_EXPORTS = {
+    # the facade (ISSUE 9)
+    "KINDS": "repro.api",
+    "RunSpec": "repro.api",
+    "simulate": "repro.api",
+    # the control plane (ISSUE 9)
+    "ControlPlane": "repro.control",
+    "Lease": "repro.control",
+    # planner actions — the typed vocabulary every layer shares
+    "Grow": "repro.core.planner",
+    "Migrate": "repro.core.planner",
+    "Shrink": "repro.core.planner",
+    "Wait": "repro.core.planner",
+    # admission + routing
+    "AdmissionController": "repro.core.scheduler.admission",
+    "make_router": "repro.fleet.router",
+    "make_zone_router": "repro.cluster.policies",
+    # serving gauges
+    "PredictiveSLOGauge": "repro.serving.slo",
+    "QueueTickGauge": "repro.serving.slo",
+    "SLOGauge": "repro.serving.slo",
+    "make_gauge": "repro.serving.slo",
+    # telemetry
+    "Tracer": "repro.obs",
+}
+
+#: deprecated top-level aliases: name -> (home module, successor hint).
+_DEPRECATED = {
+    "run_baseline": ("repro.core.scheduler.policies", "repro.api.simulate"),
+    "run_scheme_a": ("repro.core.scheduler.policies", "repro.api.simulate"),
+    "run_scheme_b": ("repro.core.scheduler.policies", "repro.api.simulate"),
+    "run_serving": ("repro.serving.sim", "repro.api.simulate"),
+    "run_fleet": ("repro.fleet.orchestrator", "repro.api.simulate"),
+    "run_cluster": ("repro.cluster.orchestrator", "repro.api.simulate"),
+}
+
+
+def __getattr__(name: str):
+    import importlib
+    if name in _EXPORTS:
+        value = getattr(importlib.import_module(_EXPORTS[name]), name)
+    elif name in _DEPRECATED:
+        module, successor = _DEPRECATED[name]
+        warnings.warn(
+            f"repro.{name} is deprecated; import it from {module} or use "
+            f"{successor}(RunSpec(...))", DeprecationWarning, stacklevel=2)
+        value = getattr(importlib.import_module(module), name)
+    else:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    globals()[name] = value   # cache: resolve (and warn) only once
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_EXPORTS) | set(_DEPRECATED))
+
+
+__all__ = sorted(_EXPORTS)

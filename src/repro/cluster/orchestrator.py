@@ -235,11 +235,13 @@ class ClusterOrchestrator:
         origin: Mapping[str, str] | None = None,
         tracer=None,
     ) -> ClusterMetrics:
-        policy = ClusterPolicy(
-            self.zones, self.router, self.wake_latency_s, origin=origin
-        )
-        devices = [d for z in self.zones for d in z.devices]
-        return EventKernel(devices, policy, tracer=tracer).run(jobs)
+        """Thin shim over :func:`repro.api.simulate` (kind ``"cluster"``)."""
+        from repro.api import RunSpec, simulate
+        return simulate(RunSpec(kind="cluster", zones=self.zones,
+                                router=self.router, jobs=jobs,
+                                origin=origin,
+                                wake_latency_s=self.wake_latency_s,
+                                tracer=tracer))
 
 
 def run_cluster(
@@ -250,6 +252,6 @@ def run_cluster(
     wake_latency_s: float = WAKE_LATENCY_S,
     tracer=None,
 ) -> ClusterMetrics:
-    """One-shot convenience wrapper."""
+    """Thin shim over :func:`repro.api.simulate` (kind ``"cluster"``)."""
     orch = ClusterOrchestrator(zones, router, wake_latency_s=wake_latency_s)
     return orch.run(jobs, origin=origin, tracer=tracer)

@@ -1,0 +1,12 @@
+"""Control plane: lease-based provisioning over MIG devices (ISSUE 9).
+
+* :mod:`repro.control.plane` — :class:`ControlPlane` (``provision`` /
+  ``status`` / ``release`` / ``extend_lease`` / ``heartbeat`` +
+  deterministic ledger replay) and the :class:`Lease` contract.
+* ``python -m repro.control`` — the operator CLI persisting plane state
+  as a JSON operation ledger (:mod:`repro.control.__main__`).
+"""
+
+from repro.control.plane import DEFAULT_LEASE_S, ControlPlane, Lease
+
+__all__ = ["DEFAULT_LEASE_S", "ControlPlane", "Lease"]

@@ -87,6 +87,26 @@ class Grow(Action):
 
 
 @dataclasses.dataclass(frozen=True)
+class Shrink(Action):
+    """Release a live partition and re-place its workload on a *smaller*
+    slice — the symmetric trade to :class:`Grow` (serving-engine
+    scale-down): the freed span fissions back into the FSM for neighbours
+    to fuse, priced as Joules saved over the forecast-quiet horizon
+    against the KV-rebuild cost if the headroom forecast is wrong."""
+
+    released: Partition
+    inner: Action  # FreshAllocate or ReshapeFuseFission
+
+    @property
+    def profile(self) -> PartitionProfile:
+        return self.inner.profile  # type: ignore[union-attr]
+
+    def describe(self) -> str:
+        return (f"shrink {self.released.profile.name} -> "
+                f"{self.inner.describe()}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Migrate(Action):
     """Fleet level: a restarted job lands on a *different* device than its
     previous run (the A100 job that outgrows 40GB restarting on an H100).

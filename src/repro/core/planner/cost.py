@@ -60,6 +60,10 @@ class CostTerms:
     queue_depth: float = 0.0
     slo_violation_prob: float = 0.0  # predicted p99 TTFT/TPOT miss prob.
     reach_delta: float = 0.0     # |F_s| change the action causes (graph)
+    #: dynamic watts the action stops burning (Shrink candidates: the
+    #: power-model span times the compute fraction surrendered); credited
+    #: over the shrink horizon by ``serving_shrink_cost``
+    power_saved_w: float = 0.0
 
 
 def _tier_value(tier, terms: CostTerms) -> float:
@@ -130,6 +134,48 @@ def serving_grow_cost(miss_penalty_s: float = SLO_MISS_PENALTY_S) -> CostModel:
 
 
 SERVING_GROW_COST = serving_grow_cost()
+
+#: Horizon (seconds) a shrink's power saving is credited over — the
+#: window the headroom forecast claims will stay quiet.  MISO's EWMA
+#: decay and the admission controller's forecast both look ~30-60s out;
+#: crediting longer would let a single calm minute buy reconfigurations
+#: the next burst immediately undoes.
+SHRINK_HORIZON_S = 60.0
+
+#: Joules-saved that justify one second of the shrink trade — the
+#: exchange rate converting ``power_saved_w * SHRINK_HORIZON_S`` into the
+#: same unit as ``reconfig_s`` and the risk penalty.  Sized at the
+#: dynamic draw of a mid A100 slice (~150W): a shrink that saves a full
+#: slice's wattage over the horizon buys tens of trade-seconds, while a
+#: marginal 1/7-compute saving barely covers the rebuild.
+SHRINK_TRADE_W = 150.0
+
+
+def serving_shrink_cost(horizon_s: float = SHRINK_HORIZON_S,
+                        trade_w: float = SHRINK_TRADE_W,
+                        miss_penalty_s: float = SLO_MISS_PENALTY_S
+                        ) -> CostModel:
+    """Serving-engine scale-down — :class:`Grow`'s symmetric trade.  The
+    top tier weighs the Joules a smaller slice stops burning over the
+    forecast-quiet horizon (``power_saved_w * horizon_s``, converted to
+    trade-seconds at ``trade_w``) against the reconfiguration + KV
+    rebuild the shrink pays now plus the penalty-priced probability the
+    headroom forecast is wrong (the engine regrows and pays it all
+    again).  The stay candidate carries zero on every term, so an engine
+    shrinks exactly when the forecast savings outweigh the risked
+    rebuild.  Ties fall through to the shrink ladder (deepest rung
+    first), disturbance, and the reachability delta — freeing span is
+    the whole point, so |F_s| gains break the final ties."""
+    return CostModel("serving_shrink", (
+        (("slo_violation_prob", miss_penalty_s), ("reconfig_s", 1.0),
+         ("power_saved_w", -horizon_s / trade_w)),
+        ("ladder_rank", 1.0),
+        ("disturbance", 1.0),
+        ("reach_delta", -1.0),
+    ))
+
+
+SERVING_SHRINK_COST = serving_shrink_cost()
 
 #: Fleet device ranking, best-fit flavour: never wake a gated device if an
 #: awake one fits, waste the least slice memory, fill the fullest device,

@@ -11,6 +11,8 @@ shared cost model.
 
 from __future__ import annotations
 
+from typing import Mapping
+
 from repro.core.partition_manager import Partition
 from repro.core.partition_state import PartitionBackend, PartitionProfile
 from repro.core.planner.planner import PlanRequest
@@ -80,6 +82,19 @@ def grow_ladder(backend: PartitionBackend, current: PartitionProfile,
     return strong + weak or [nxt]
 
 
+def shrink_ladder(backend: PartitionBackend, current: PartitionProfile,
+                  floor_gb: float) -> list[PartitionProfile]:
+    """Smaller profiles to try, deepest shrink first: every profile with
+    less memory than the current slice that still holds ``floor_gb`` (the
+    engine's live bytes plus admission headroom), ordered by ascending
+    memory then ascending compute — the rung surrendering the most
+    wattage leads, and the cost model's trade tier decides how far down
+    the risk actually lets the engine go."""
+    return sorted((p for p in backend.profiles
+                   if p.mem_gb < current.mem_gb and p.mem_gb >= floor_gb),
+                  key=lambda p: (p.mem_gb, p.compute_fraction))
+
+
 def place_request(backend: PartitionBackend, est_mem_gb: float | None,
                   compute_demand: float,
                   reconfig_cost_s: float) -> PlanRequest:
@@ -123,3 +138,32 @@ def grow_request(backend: PartitionBackend, current: Partition,
                        slo_relief=slo_relief,
                        needed_compute=needed_compute,
                        allow_stay=allow_stay)
+
+
+def shrink_request(backend: PartitionBackend, current: Partition,
+                   floor_gb: float,
+                   power_saved_w_by: Mapping[str, float],
+                   profile_risk: Mapping[str, float],
+                   reconfig_cost_s: float = 0.0) -> PlanRequest:
+    """A scale-down request for a live partition (serving engines) — the
+    symmetric trade to :func:`grow_request`.  ``floor_gb`` is the memory
+    the workload must keep (live KV bytes plus headroom), so every rung
+    is feasible by construction; ``power_saved_w_by`` carries the dynamic
+    watts each rung surrenders and ``profile_risk`` the probability the
+    headroom forecast is wrong at that rung (both per profile name —
+    shrink risk *rises* down the ladder where growth risk falls, so the
+    grow path's relief scaling cannot express it).  ``allow_stay`` is
+    always on: the stay candidate scores zero on the whole trade tier,
+    so the engine shrinks exactly when the forecast Joules outweigh the
+    risked rebuild — see :func:`repro.core.planner.cost
+    .serving_shrink_cost`."""
+    return PlanRequest(ladder=shrink_ladder(backend, current.profile,
+                                            floor_gb),
+                       need_gb=floor_gb,
+                       reuse_idle=False,
+                       reconfig_cost_s=reconfig_cost_s,
+                       release=current,
+                       allow_stay=True,
+                       shrink=True,
+                       power_saved_w_by=power_saved_w_by,
+                       profile_risk=profile_risk)

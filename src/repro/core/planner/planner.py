@@ -19,12 +19,13 @@ candidate profiles, then a second allocate loop).
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Sequence
+from typing import Hashable, Mapping, Sequence
 
 from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionProfile
 from repro.core.planner.actions import (Action, FreshAllocate, Grow,
-                                        ReshapeFuseFission, ReuseIdle, Wait)
+                                        ReshapeFuseFission, ReuseIdle,
+                                        Shrink, Wait)
 from repro.core.planner.cost import CostModel, CostTerms
 
 
@@ -56,6 +57,20 @@ class PlanRequest:
     #: probability) as a real candidate, so growth happens exactly when
     #: the predicted miss outweighs the reconfiguration
     allow_stay: bool = False
+    # -- scale-down (serving shrink; see cost.serving_shrink_cost) --------
+    #: type the committed action as a :class:`Shrink` instead of a
+    #: :class:`Grow` — the release-and-recarve mechanics are identical,
+    #: the direction (and the cost model trading it) differs
+    shrink: bool = False
+    #: per-profile-name dynamic watts the candidate stops burning
+    #: (``power_saved_w`` cost feature); absent names score 0 — the stay
+    #: candidate always does
+    power_saved_w_by: Mapping[str, float] | None = None
+    #: per-profile-name forecast-wrong probability, overriding the
+    #: relief-scaled ``slo_violation_prob`` (shrink risk *rises* down the
+    #: ladder where growth risk falls, so the relief machinery cannot
+    #: express it)
+    profile_risk: Mapping[str, float] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +99,8 @@ class Plan:
         if isinstance(act, Wait):
             return act                  # stay put: nothing is released
         if self.request.release is not None:
-            return Grow(self.request.release, act)
+            wrap = Shrink if self.request.shrink else Grow
+            return wrap(self.request.release, act)
         return act
 
     def explain(self) -> str:
@@ -232,13 +248,20 @@ class PartitionPlanner:
                    deficit: float, request: PlanRequest,
                    relief: float) -> Candidate:
         reach = float(self.pm.reach(state))
+        pname = request.ladder[rank].name
+        prob = request.slo_violation_prob * relief
+        if request.profile_risk is not None:
+            prob = request.profile_risk.get(pname, prob)
+        saved_w = 0.0
+        if request.power_saved_w_by is not None:
+            saved_w = request.power_saved_w_by.get(pname, 0.0)
         terms = CostTerms(reconfig_s=reconfig_s, ladder_rank=float(rank),
                           disturbance=float(disturbance),
                           reach=reach, reach_delta=reach - live_reach,
                           mem_waste_gb=waste, compute_deficit=deficit,
                           queue_depth=request.queue_depth,
-                          slo_violation_prob=(request.slo_violation_prob
-                                              * relief))
+                          slo_violation_prob=prob,
+                          power_saved_w=saved_w)
         return Candidate(action=action, terms=terms, cost=model.cost(terms))
 
     # -- commit ------------------------------------------------------------

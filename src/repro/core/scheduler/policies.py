@@ -15,6 +15,7 @@ from typing import Iterable
 from repro.core.partition_manager import Partition
 from repro.core.partition_state import PartitionBackend
 from repro.core.planner.ladders import tight_profile
+from repro.core.planner.lookahead import carve_homogeneous
 from repro.core.scheduler.energy import DevicePowerModel
 from repro.core.scheduler.events import (EARLY_RESTART, OOM, RECONFIG_COST_S,
                                          DeviceSim)
@@ -62,11 +63,19 @@ class SchemeAPolicy(_SingleDevicePolicy):
     online = False
 
     def __init__(self, use_prediction: bool = True,
-                 work_steal: bool = False) -> None:
+                 work_steal: bool = False, plan_ahead: int = 0) -> None:
         self.use_prediction = use_prediction
         self.work_steal = work_steal
+        #: beam width for k-step plan-ahead carving over the compiled
+        #: transition graph (repro.core.planner.lookahead); 0 keeps the
+        #: seed's greedy per-slice ``pm.allocate`` loop bit-for-bit.  The
+        #: beam always scores the greedy chain as a candidate, so
+        #: enabling it can reorder/improve a group's slices but never
+        #: carve fewer or weaker ones.
+        self.plan_ahead = plan_ahead
         self.name = ("scheme_a" + ("+pred" if use_prediction else "")
-                     + ("+steal" if work_steal else ""))
+                     + ("+steal" if work_steal else "")
+                     + ("+plan" if plan_ahead else ""))
 
     def on_init(self, kernel: EventKernel, jobs: list) -> None:
         backend = kernel.devices[0].backend
@@ -125,16 +134,23 @@ class SchemeAPolicy(_SingleDevicePolicy):
         same_mem = sorted(
             [p for p in backend.profiles if p.mem_gb == profile.mem_gb],
             key=lambda p: -p.compute_fraction)
-        parts: list[Partition] = []
-        while True:
-            part = None
-            for prof_try in same_mem:
-                part = dev.pm.allocate(prof_try)
-                if part is not None:
+        if self.plan_ahead > 0:
+            # k-step lookahead over the compiled graph: score whole carve
+            # chains instead of committing slice-by-slice (greedy is still
+            # a candidate, so this is never worse)
+            parts = carve_homogeneous(dev.pm, same_mem,
+                                      beam_width=self.plan_ahead)
+        else:
+            parts = []
+            while True:
+                part = None
+                for prof_try in same_mem:
+                    part = dev.pm.allocate(prof_try)
+                    if part is not None:
+                        break
+                if part is None:
                     break
-            if part is None:
-                break
-            parts.append(part)
+                parts.append(part)
         assert parts, f"cannot create any {profile.name} partition"
         self.parts = parts
 
@@ -219,21 +235,30 @@ class SchemeBPolicy(_SingleDevicePolicy):
 
 def run_baseline(jobs: Iterable[Job], backend: PartitionBackend,
                  power: DevicePowerModel, tracer=None) -> Metrics:
-    sim = DeviceSim(backend, power, use_prediction=False, policy="baseline")
-    return EventKernel([sim], BaselinePolicy(), tracer=tracer).run(jobs)
+    """Thin shim over :func:`repro.api.simulate` (kind ``"baseline"``)."""
+    from repro.api import RunSpec, simulate
+    return simulate(RunSpec(kind="baseline", jobs=list(jobs),
+                            backend=backend, power=power, tracer=tracer))
 
 
 def run_scheme_a(jobs: Iterable[Job], backend: PartitionBackend,
                  power: DevicePowerModel, use_prediction: bool = True,
-                 work_steal: bool = False, tracer=None) -> Metrics:
-    policy = SchemeAPolicy(use_prediction, work_steal)
-    sim = DeviceSim(backend, power, use_prediction, policy=policy.name)
-    return EventKernel([sim], policy, tracer=tracer).run(jobs)
+                 work_steal: bool = False, plan_ahead: int = 0,
+                 tracer=None) -> Metrics:
+    """Thin shim over :func:`repro.api.simulate` (kind ``"scheme_a"``)."""
+    from repro.api import RunSpec, simulate
+    return simulate(RunSpec(kind="scheme_a", jobs=list(jobs),
+                            backend=backend, power=power,
+                            use_prediction=use_prediction,
+                            work_steal=work_steal, plan_ahead=plan_ahead,
+                            tracer=tracer))
 
 
 def run_scheme_b(jobs: Iterable[Job], backend: PartitionBackend,
                  power: DevicePowerModel, use_prediction: bool = True,
                  tracer=None) -> Metrics:
-    policy = SchemeBPolicy(use_prediction)
-    sim = DeviceSim(backend, power, use_prediction, policy=policy.name)
-    return EventKernel([sim], policy, tracer=tracer).run(jobs)
+    """Thin shim over :func:`repro.api.simulate` (kind ``"scheme_b"``)."""
+    from repro.api import RunSpec, simulate
+    return simulate(RunSpec(kind="scheme_b", jobs=list(jobs),
+                            backend=backend, power=power,
+                            use_prediction=use_prediction, tracer=tracer))

@@ -138,7 +138,7 @@ class FleetPolicy(SchedulingPolicy):
         self._drain_key = None                   # state key of last full scan
         self._fresh: list[Job] = []              # arrivals since that scan
         self._arrival_rev = 0                    # admission forecast revision
-        self._fail_snap: dict[int, tuple] = {}   # id(job) -> device epochs
+        self._fail_snap: dict[str, tuple] = {}   # job name -> device epochs
 
     # -- dispatch ----------------------------------------------------------
 
@@ -248,17 +248,26 @@ class FleetPolicy(SchedulingPolicy):
         self._recheck_tick = None
 
     def forget(self, job_name: str) -> None:
-        """Drop the job's placement history — it moved to another fleet, so
-        a later return must not double-count as an intra-fleet migration
-        (the cluster layer counts the cross-zone move instead)."""
+        """Drop ALL of the job's per-name state: placement history (it
+        moved to another fleet — a later return must not double-count as
+        an intra-fleet migration; the cluster layer counts the cross-zone
+        move instead), its failure snapshot, and its open deferral.
+        Called on cross-zone moves and on control-plane lease release, so
+        repeated provision→release cycles stay leak-free: before this
+        audit only ``_last_device`` was dropped, and ``_fail_snap`` was
+        keyed by ``id(job)`` — a recycled object id could alias a new
+        job onto a dead job's epoch snapshot and silently skip its first
+        retry."""
         self._last_device.pop(job_name, None)
+        self._fail_snap.pop(job_name, None)
+        self._deferred_names.discard(job_name)
 
     def _dispatch_one(self, kernel: EventKernel, job: Job) -> bool:
         changed = None
         track = (self._can_skip and self.admission is None
                  and not self._force_admit)
         if track:
-            snap = self._fail_snap.get(id(job))
+            snap = self._fail_snap.get(job.name)
             if snap is not None:
                 epochs = kernel.device_epoch
                 if snap == tuple(epochs):
@@ -268,10 +277,10 @@ class FleetPolicy(SchedulingPolicy):
                     if then != now)
         placed = self.dispatch_job(kernel, job, changed=changed)
         if placed is not None:
-            self._fail_snap.pop(id(job), None)
+            self._fail_snap.pop(job.name, None)
             return True
         if track:
-            self._fail_snap[id(job)] = tuple(kernel.device_epoch)
+            self._fail_snap[job.name] = tuple(kernel.device_epoch)
         return False
 
     def _scan_key(self, kernel: EventKernel):
@@ -425,9 +434,15 @@ class FleetOrchestrator:
         self.energy = FleetEnergyIntegrator(self.devices)
 
     def run(self, jobs: Iterable[Job], tracer=None) -> FleetMetrics:
-        policy = FleetPolicy(self.router, self.wake_latency_s, self.energy,
-                             admission=self.admission)
-        return EventKernel(self.devices, policy, tracer=tracer).run(jobs)
+        """Thin shim over :func:`repro.api.simulate` (kind ``"fleet"``);
+        the orchestrator's own energy integrator is passed through so
+        repeated ``run`` calls keep accumulating fleet Joules."""
+        from repro.api import RunSpec, simulate
+        return simulate(RunSpec(kind="fleet", devices=self.devices,
+                                router=self.router, jobs=jobs,
+                                wake_latency_s=self.wake_latency_s,
+                                admission=self.admission,
+                                energy=self.energy, tracer=tracer))
 
 
 def run_fleet(devices: Sequence[DeviceSim], router: Router,
@@ -435,7 +450,7 @@ def run_fleet(devices: Sequence[DeviceSim], router: Router,
               wake_latency_s: float = WAKE_LATENCY_S,
               admission: AdmissionController | None = None,
               tracer=None) -> FleetMetrics:
-    """One-shot convenience wrapper."""
+    """Thin shim over :func:`repro.api.simulate` (kind ``"fleet"``)."""
     return FleetOrchestrator(devices, router,
                              wake_latency_s=wake_latency_s,
                              admission=admission).run(jobs, tracer=tracer)

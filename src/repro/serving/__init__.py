@@ -1,0 +1,38 @@
+"""Serving: continuous-batching LLM inference on MIG slices.
+
+* :mod:`repro.serving.sim` — the event-kernel serving simulator
+  (:class:`EngineSim` per slice: decode ticks, KV-cache growth,
+  SLO-pressure growth, headroom-forecast shrink).
+* :mod:`repro.serving.slo` — TTFT gauges (:class:`QueueTickGauge`,
+  :class:`PredictiveSLOGauge`) and the :class:`SLOPressure` signal.
+* :mod:`repro.serving.engine` — the JAX-backed single-engine runtime
+  (imported lazily: pulling ``jax`` is pay-for-what-you-use).
+"""
+
+from repro.serving.sim import (EngineSim, LLMServingModel, ServingConfig,
+                               ServingDevice, ServingMetrics, ServingPolicy,
+                               ServingRequest, diurnal_requests,
+                               poisson_requests, run_serving)
+from repro.serving.slo import (PredictiveSLOGauge, QueueTickGauge, SLOGauge,
+                               SLOPressure, make_gauge)
+
+#: names resolved lazily from the JAX-backed engine module.
+_ENGINE_EXPORTS = ("EngineConfig", "Request", "ServeEngine")
+
+
+def __getattr__(name: str):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+        value = getattr(engine, name)
+        globals()[name] = value     # cache: __getattr__ runs once per name
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "EngineConfig", "EngineSim", "LLMServingModel", "PredictiveSLOGauge",
+    "QueueTickGauge", "Request", "SLOGauge", "SLOPressure", "ServeEngine",
+    "ServingConfig", "ServingDevice", "ServingMetrics", "ServingPolicy",
+    "ServingRequest", "diurnal_requests", "make_gauge", "poisson_requests",
+    "run_serving",
+]

@@ -49,7 +49,8 @@ from repro.core.partition_manager import Partition, PartitionManager
 from repro.core.partition_state import PartitionProfile
 from repro.core.planner import (SERVING_GROW_COST, SLO_MISS_PENALTY_S,
                                 PartitionPlanner, Wait, grow_request,
-                                serving_grow_cost)
+                                serving_grow_cost, serving_shrink_cost,
+                                shrink_ladder, shrink_request)
 from repro.core.scheduler.energy import EnergyIntegrator
 from repro.core.scheduler.job import GB
 from repro.core.scheduler.kernel import EventKernel, SchedulingPolicy
@@ -137,6 +138,36 @@ def poisson_requests(n: int, rate_per_s: float, seed: int = 0,
     return reqs
 
 
+def diurnal_requests(n: int, peak_rate_per_s: float,
+                     trough_rate_per_s: float, period_s: float,
+                     seed: int = 0, median_prompt: int = 256,
+                     median_decode: int = 160, sigma_prompt: float = 0.6,
+                     sigma_decode: float = 0.8,
+                     max_tokens: int = 4096) -> list[ServingRequest]:
+    """Bursty diurnal arrivals: a square wave alternating between
+    ``peak_rate_per_s`` (the first half of each ``period_s``) and
+    ``trough_rate_per_s``, with the same seeded heavy-tailed lengths as
+    :func:`poisson_requests`.  The elasticity benchmark's workload shape:
+    bursts that justify fused slices, troughs long enough that holding
+    them burns Joules for nothing."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        peak_phase = (t % period_s) < period_s / 2.0
+        rate = peak_rate_per_s if peak_phase else trough_rate_per_s
+        t += float(rng.exponential(1.0 / rate))
+        prompt = int(np.clip(
+            rng.lognormal(np.log(median_prompt), sigma_prompt),
+            8, max_tokens))
+        decode = int(np.clip(
+            rng.lognormal(np.log(median_decode), sigma_decode),
+            4, max_tokens))
+        reqs.append(ServingRequest(rid=i, arrival=t, prompt_tokens=prompt,
+                                   decode_tokens=decode))
+    return reqs
+
+
 # ---------------------------------------------------------------------------
 # Model + engine configuration
 # ---------------------------------------------------------------------------
@@ -200,6 +231,13 @@ class ServingConfig:
     #: disables pressure-driven growth under EITHER gauge — memory
     #: pressure (OOM, converged predictor) remains the only growth path
     scale_up_queue_ticks: int = 20
+    #: consecutive high-headroom iterations (gauge ``headroom() >= 0.5``)
+    #: before a :class:`~repro.core.planner.actions.Shrink` plan is
+    #: scored; 0 disables scale-down entirely — the default, so every
+    #: pre-elasticity golden and benchmark stays bit-for-bit.  Only the
+    #: predictive gauge reports headroom, so shrink implies
+    #: ``gauge="slo"``
+    scale_down_ticks: int = 0
     slo_ttft_s: float = 6.0
     slo_tpot_s: float = 0.30
     #: seconds-equivalent price of a predicted p99 miss — the exchange
@@ -219,6 +257,8 @@ class ServingConfig:
         n = "dynamic"
         if self.gauge == "slo" and self.scale_up_queue_ticks > 0:
             n += "+slo"
+        if self.scale_down_ticks > 0:
+            n += "+shrink"
         return n + ("+pred" if self.use_prediction else "")
 
 
@@ -268,6 +308,11 @@ class ServingDevice:
     #: flight recorder (repro.obs.Tracer); instance-assigned by the event
     #: kernel when a run is traced, class-default None otherwise
     tracer = None
+    #: reachability-floor gate (repro.core.scheduler.admission
+    #: .AdmissionController) for pressure-driven engine growth on this
+    #: device; instance-assigned by ``run_serving(admission=...)``, class
+    #: default None = admit every grow (the pre-elasticity behaviour)
+    admission = None
 
     def __init__(self, model: str, name: str | None = None) -> None:
         try:
@@ -325,12 +370,18 @@ class EngineSim:
         self.last_pressure: SLOPressure | None = None
         self.gauge = make_gauge(cfg)
         self.grow_cost = serving_grow_cost(cfg.slo_miss_penalty_s)
+        self.shrink_cost = serving_shrink_cost(
+            miss_penalty_s=cfg.slo_miss_penalty_s)
         self.n_oom = 0
         self.n_early = 0
         self.n_preemptions = 0
         self.n_dropped = 0
         self.n_scaleups = 0
+        self.n_shrinks = 0
+        self.n_grow_deferrals = 0
         self._grow_cooldown = 0
+        self._shrink_cooldown = 0
+        self._calm_ticks = 0
 
     # -- state helpers -----------------------------------------------------
 
@@ -378,6 +429,8 @@ class EngineSim:
     def enqueue(self, kernel: EventKernel, req: ServingRequest) -> None:
         self.waiting.append(req)
         self.gauge.note_arrival(kernel.t)
+        if self.device.admission is not None:
+            self.device.admission.note_arrival(kernel.t, req)
         if not self.migrating and not self._tick_pending:
             self._admit(kernel)
             self._schedule_tick(kernel)
@@ -424,6 +477,8 @@ class EngineSim:
         self._tick_pending = False
         if self._grow_cooldown > 0:
             self._grow_cooldown -= 1
+        if self._shrink_cooldown > 0:
+            self._shrink_cooldown -= 1
         # the iteration that just ran appends one token per sequence; check
         # whether its KV allocations actually fit *before* crediting them
         grew = sum(1 for r in self.running if not r.in_prefill) \
@@ -516,6 +571,18 @@ class EngineSim:
                         violation_prob=pressure.violation_prob)
                 self.device.sync()
                 return
+        # scale-down: the symmetric signal — the gauge's sustained-headroom
+        # forecast must hold for a streak of iterations before the shrink
+        # trade (Joules saved over the horizon vs reconfiguration + rebuild
+        # + regrow risk) is even scored
+        if self.cfg.scale_down_ticks > 0 and self.cfg.policy == "dynamic":
+            head = self.gauge.headroom(self, kernel.t)
+            self._calm_ticks = self._calm_ticks + 1 if head >= 0.5 else 0
+            if (self._calm_ticks >= self.cfg.scale_down_ticks
+                    and self._shrink_cooldown == 0
+                    and self._begin_shrink(kernel, head)):
+                self.device.sync()
+                return
         self._schedule_tick(kernel)
         self.device.sync()
 
@@ -589,6 +656,26 @@ class EngineSim:
             slo_relief=self.gauge.relief if pressure else None,
             needed_compute=pressure.needed_compute if pressure else 0.0,
             allow_stay=pressure is not None), model=self.grow_cost)
+        if (not crashed and dev.admission is not None
+                and plan.chosen is not None
+                and not isinstance(plan.chosen.action, Wait)):
+            # reachability-floor admission (the fleet's controller, reused):
+            # a grow whose post-action |F_s| would break the guarantee that
+            # forecast arrivals stay hostable *defers* — the engine backs
+            # off instead of thrashing the FSM it shares with its
+            # neighbours.  OOM restarts are never gated: a crashed engine
+            # holds live KV that must land somewhere.
+            decision = dev.admission.decide(dev.pm, plan, kernel.t,
+                                            shares=max(len(dev.engines), 1))
+            if not decision.admit:
+                self.n_grow_deferrals += 1
+                self._grow_cooldown = max(self.cfg.scale_up_queue_ticks, 10)
+                if dev.tracer is not None:
+                    dev.tracer.instant(
+                        "grow.defer", device=dev.name,
+                        lane=f"engine{self.eid}", cat="admission",
+                        decision=decision.describe())
+                return False
         result = dev.planner.execute(plan)
         assert result is not None and result.partition is not None
         self.partition = result.partition
@@ -614,6 +701,12 @@ class EngineSim:
         self.gauge.reset()
         self.predictor = self._fresh_predictor()
         self.last_prediction = None
+        # stale-state audit (provision→release cycles): the pressure
+        # snapshot was measured on the slice being abandoned — a later
+        # memory-forced grow reading its ``needed_compute`` would size the
+        # new slice off a dead configuration
+        self.last_pressure = None
+        self._calm_ticks = 0
         self._requested_cum = 0.0
         kernel.schedule_reconfig(kernel.t + dur, self)
         if dev.tracer is not None:
@@ -623,6 +716,73 @@ class EngineSim:
                 from_profile=from_profile,
                 to_profile=self.partition.profile.name,
                 crashed=crashed, rebuild_tokens=rebuild_tokens)
+        return True
+
+    def _begin_shrink(self, kernel: EventKernel, head: float) -> bool:
+        """Scale-down through the shared planner — :meth:`_begin_migration`
+        run in reverse.  The shrink ladder holds every smaller profile
+        that still fits the engine's live KV (plus the converged
+        predictor's peak, if any); each rung carries the dynamic watts it
+        surrenders and the probability the headroom forecast is wrong at
+        that compute (regrow risk rises as the rung shrinks), and
+        ``serving_shrink_cost`` trades the horizon's Joules against the
+        reconfiguration + KV rebuild + risk-priced regrow.  The stay
+        candidate scores zero on the whole trade, so a marginal saving
+        never buys a migration.  Returns False when the engine keeps its
+        slice (cooldown either way — a borderline forecast must not
+        re-run the plan every iteration)."""
+        dev = self.device
+        self._calm_ticks = 0
+        self._shrink_cooldown = max(self.cfg.scale_down_ticks, 10)
+        floor_b = self.live_bytes(extra_tokens=len(self.running))
+        if (self.cfg.use_prediction and self.last_prediction is not None
+                and self.last_prediction.converged):
+            floor_b = max(floor_b, self.last_prediction.peak_mem_bytes)
+        floor_gb = floor_b / (self.cfg.admit_frac * GB)
+        ladder = shrink_ladder(dev.backend, self.partition.profile, floor_gb)
+        if not ladder:
+            return False
+        c = max(self.compute, 1e-6)
+        util = max(0.0, 1.0 - head)
+        span = dev.energy.model.p_peak_w - dev.energy.model.p_idle_w
+        saved = {p.name: span * (c - p.compute_fraction) for p in ladder}
+        # utilisation scales inversely with compute: the regrow risk at a
+        # rung is the load it would run at, saturating at certainty
+        risk = {p.name: min(1.0, util * c / max(p.compute_fraction, 1e-6))
+                for p in ladder}
+        rebuild_tokens = sum(r.kv_tokens for r in self.running)
+        trade_cost_s = (dev.reconfig_s + rebuild_tokens
+                        / (self.model.prefill_tokens_per_s * c))
+        from_profile = self.partition.profile.name
+        plan = dev.planner.plan(shrink_request(
+            dev.backend, self.partition, floor_gb, saved, risk,
+            reconfig_cost_s=trade_cost_s), model=self.shrink_cost)
+        result = dev.planner.execute(plan)
+        assert result is not None and result.partition is not None
+        self.partition = result.partition
+        self.partition.busy = True
+        if isinstance(result.action, Wait):
+            return False        # the trade kept the slice
+        self.n_shrinks += 1
+        for r in self.running:
+            r.in_prefill = True          # KV is rebuilt on the new slice
+        c_new = max(self.compute, 1e-6)
+        dur = (dev.reconfig_s + rebuild_tokens
+               / (self.model.prefill_tokens_per_s * c_new))
+        self.migrating = True
+        self.gauge.reset()
+        self.predictor = self._fresh_predictor()
+        self.last_prediction = None
+        self.last_pressure = None
+        self._requested_cum = 0.0
+        kernel.schedule_reconfig(kernel.t + dur, self)
+        if dev.tracer is not None:
+            dev.tracer.span(
+                kernel.t, kernel.t + dur, f"engine{self.eid}.shrink",
+                device=dev.name, lane=f"engine{self.eid}", cat="reconfig",
+                from_profile=from_profile,
+                to_profile=self.partition.profile.name,
+                headroom=head, rebuild_tokens=rebuild_tokens)
         return True
 
     def finish_migration(self, kernel: EventKernel) -> None:
@@ -776,7 +936,10 @@ class ServingPolicy(SchedulingPolicy):
             n_early_restarts=sum(e.n_early for e in self.engines),
             n_preemptions=sum(e.n_preemptions for e in self.engines),
             n_scaleups=sum(e.n_scaleups for e in self.engines),
-            n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices))
+            n_reconfigs=sum(d.pm.n_reconfigs for d in kernel.devices),
+            n_shrinks=sum(e.n_shrinks for e in self.engines),
+            n_grow_deferrals=sum(e.n_grow_deferrals
+                                 for e in self.engines))
 
 
 @dataclasses.dataclass
@@ -801,6 +964,11 @@ class ServingMetrics:
     n_preemptions: int
     n_scaleups: int
     n_reconfigs: int
+    #: engine scale-downs committed (defaulted: metrics pinned before
+    #: elasticity compare equal field-for-field)
+    n_shrinks: int = 0
+    #: pressure grows the reachability-floor admission gate deferred
+    n_grow_deferrals: int = 0
 
     @property
     def energy_per_token(self) -> float:
@@ -824,21 +992,24 @@ class ServingMetrics:
                 f"energy={self.energy_j / 1e3:.1f}kJ  "
                 f"oom={self.n_oom} early={self.n_early_restarts} "
                 f"preempt={self.n_preemptions} scaleup={self.n_scaleups} "
+                f"shrink={self.n_shrinks} defer={self.n_grow_deferrals} "
                 f"reconf={self.n_reconfigs}")
 
 
 def run_serving(device_models: Sequence[str], cfg: ServingConfig,
                 requests: Iterable[ServingRequest],
                 model: LLMServingModel | None = None,
-                tracer=None) -> ServingMetrics:
+                tracer=None, admission=None) -> ServingMetrics:
     """Simulate ``requests`` on a fleet of MIG devices under one serving
     policy; e.g. ``run_serving(["a100"], ServingConfig(policy="dynamic"),
-    poisson_requests(200, rate_per_s=2.0))``."""
-    counts: dict[str, int] = {}
-    devices = []
-    for m in device_models:
-        idx = counts.get(m, 0)
-        counts[m] = idx + 1
-        devices.append(ServingDevice(m, name=f"{m}-{idx}"))
-    policy = ServingPolicy(model or LLMServingModel(), cfg)
-    return EventKernel(devices, policy, tracer=tracer).run(requests)
+    poisson_requests(200, rate_per_s=2.0))``.  ``admission`` (an
+    :class:`~repro.core.scheduler.admission.AdmissionController`) gates
+    pressure-driven engine growth behind the fleet's reachability floor.
+
+    Thin shim over :func:`repro.api.simulate` — the facade owns
+    construction, so facade and legacy callers share one code path."""
+    from repro.api import RunSpec, simulate
+    return simulate(RunSpec(kind="serving", devices=list(device_models),
+                            serving=cfg, requests=list(requests),
+                            serving_model=model, tracer=tracer,
+                            admission=admission))

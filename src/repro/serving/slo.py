@@ -107,6 +107,15 @@ class SLOGauge:
     def observe(self, engine, t: float) -> SLOPressure:
         raise NotImplementedError
 
+    def headroom(self, engine, t: float) -> float:
+        """Forecast *sustained* headroom in [0, 1] — the scale-down
+        signal, symmetric to ``observe``'s violation probability: 1 means
+        the engine could serve its forecast load on a smaller slice, 0
+        means shrinking would immediately regrow.  The base gauge (and
+        the queue-tick emulation) reports 0 — engines under it never
+        scale down, which keeps every pre-elasticity golden bit-for-bit."""
+        return 0.0
+
     def attempt(self) -> None:
         """Pressure crossed the trade threshold; a growth plan was run."""
 
@@ -268,6 +277,35 @@ class PredictiveSLOGauge(SLOGauge):
             queue_depth=len(engine.waiting) / max(cfg.max_batch, 1),
             ttft_risk=ttft_risk, tpot_risk=tpot_risk, oom_risk=oom_risk,
             violation_prob=prob, needed_compute=min(1.0, max(needs)))
+
+    # -- the scale-down signal ---------------------------------------------
+
+    def headroom(self, engine, t: float) -> float:
+        """Sustained-headroom forecast: 1 - (EWMA arrival rate / this
+        slice's service capacity), gated to zero whenever *any* growth
+        signal is live — a non-empty queue, an in-flight migration, or a
+        converged predictor showing OOM tail mass.  The arrival EWMA
+        decays through quiet time (:meth:`arrival_rate`), so headroom
+        rises only after a burst has genuinely passed, not at the first
+        idle tick inside one."""
+        if engine.waiting or engine.migrating:
+            return 0.0
+        cfg, model = engine.cfg, engine.model
+        if (cfg.use_prediction and engine.last_prediction is not None
+                and engine.last_prediction.converged
+                and engine.predictor.oom_risk(
+                    engine.part_bytes, engine.last_prediction) > 0.0):
+            return 0.0
+        c = max(engine.compute, 1e-6)
+        n_running = len(engine.running)
+        step_s = (model.decode_step_fixed_s
+                  + max(n_running, 1) * model.decode_step_per_seq_s) / c
+        mean_decode = (sum(r.decode_tokens for r in engine.running)
+                       / max(n_running, 1)) if n_running else 1.0
+        service_s = mean_decode * step_s
+        capacity = cfg.max_batch / max(service_s, 1e-9)
+        util = self.arrival_rate(t) / capacity
+        return max(0.0, 1.0 - util)
 
 
 def make_gauge(cfg) -> SLOGauge:

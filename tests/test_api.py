@@ -1,0 +1,165 @@
+"""Facade parity: ``repro.api.simulate`` must reproduce every legacy
+entrypoint dataclass-equal, and the curated top-level surface (lazy
+``repro.__getattr__`` re-exports + warn-once deprecation aliases) must
+resolve (ISSUE 9)."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+import repro
+from repro.api import KINDS, RunSpec, simulate
+from repro.cluster import (ZoneTariff, cluster_workload, make_zone,
+                           make_zone_router, run_cluster)
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.job import make_mix, rodinia_job
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
+from repro.fleet import (make_fleet, make_router, poisson_arrivals,
+                         run_fleet)
+from repro.fleet.orchestrator import FleetOrchestrator
+from repro.serving.sim import ServingConfig, poisson_requests, run_serving
+
+MIX = (("gaussian", 3), ("srad", 2), ("myocyte", 2), ("lavamd", 1))
+
+
+def _batch_jobs():
+    return make_mix(MIX)
+
+
+def _fleet_jobs(n=16, seed=5):
+    jobs = [rodinia_job(["gaussian", "srad", "nw", "hotspot3d"][i % 4], i)
+            for i in range(n)]
+    return poisson_arrivals(jobs, rate_per_s=0.5, seed=seed)
+
+
+def _zones():
+    t = ZoneTariff("flat", 0.08, 0.20, period_s=600.0)
+    return [make_zone("z0", ["a100", "a100"], t),
+            make_zone("z1", ["a100", "h100"], t, phase_s=300.0)]
+
+
+def assert_metrics_equal(a, b):
+    """Dataclass equality, with the mismatching field named on failure."""
+    assert type(a) is type(b)
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    for key in da:
+        assert da[key] == db[key], f"facade diverges on {key!r}"
+
+
+class TestBatchParity:
+    """The single-device entrypoints versus RunSpec kinds.
+
+    Jobs are rebuilt per run: the simulator mutates ``est_mem_gb`` on
+    restarts, so sharing one list would leak state between the arms."""
+
+    def test_baseline(self):
+        legacy = run_baseline(_batch_jobs(), MigA100Backend(), A100_POWER)
+        facade = simulate(RunSpec(kind="baseline", jobs=_batch_jobs(),
+                                  backend=MigA100Backend(), power=A100_POWER))
+        assert_metrics_equal(legacy, facade)
+
+    @pytest.mark.parametrize("steal", [False, True])
+    def test_scheme_a(self, steal):
+        legacy = run_scheme_a(_batch_jobs(), MigA100Backend(), A100_POWER,
+                              work_steal=steal)
+        facade = simulate(RunSpec(kind="scheme_a", jobs=_batch_jobs(),
+                                  backend=MigA100Backend(), power=A100_POWER,
+                                  work_steal=steal))
+        assert_metrics_equal(legacy, facade)
+
+    def test_scheme_b(self):
+        legacy = run_scheme_b(_batch_jobs(), MigA100Backend(), A100_POWER)
+        facade = simulate(RunSpec(kind="scheme_b", jobs=_batch_jobs(),
+                                  backend=MigA100Backend(), power=A100_POWER))
+        assert_metrics_equal(legacy, facade)
+
+
+class TestServingParity:
+    def test_run_serving(self):
+        cfg = ServingConfig(policy="dynamic", n_engines=2)
+        legacy = run_serving(["a100"], cfg,
+                             poisson_requests(80, rate_per_s=2.0, seed=11))
+        facade = simulate(RunSpec(
+            kind="serving", devices=["a100"], serving=cfg,
+            requests=poisson_requests(80, rate_per_s=2.0, seed=11)))
+        assert_metrics_equal(legacy, facade)
+
+
+class TestFleetParity:
+    def test_run_fleet(self):
+        legacy = run_fleet(make_fleet(["a100", "h100"]),
+                           make_router("best_fit"), _fleet_jobs())
+        facade = simulate(RunSpec(kind="fleet",
+                                  devices=make_fleet(["a100", "h100"]),
+                                  router=make_router("best_fit"),
+                                  jobs=_fleet_jobs()))
+        assert_metrics_equal(legacy, facade)
+
+    def test_orchestrator_accumulates_energy_across_runs(self):
+        """The orchestrator shim threads its own integrator through
+        RunSpec.energy, so back-to-back runs keep accumulating joules."""
+        orch = FleetOrchestrator(make_fleet(["a100"]),
+                                 make_router("best_fit"))
+        first = orch.run(_fleet_jobs(n=6)).energy_j
+        second = orch.run(_fleet_jobs(n=6, seed=9)).energy_j
+        assert second > first
+
+
+class TestClusterParity:
+    def test_run_cluster(self):
+        router = make_zone_router("price_greedy")
+        z1 = _zones()
+        jobs1, origin1 = cluster_workload(z1, 8, period_s=300.0,
+                                          peak_rate=0.5, trough_rate=0.1,
+                                          seed=3)
+        legacy = run_cluster(z1, router, jobs1, origin=origin1)
+        z2 = _zones()
+        jobs2, origin2 = cluster_workload(z2, 8, period_s=300.0,
+                                          peak_rate=0.5, trough_rate=0.1,
+                                          seed=3)
+        facade = simulate(RunSpec(kind="cluster", zones=z2,
+                                  router=make_zone_router("price_greedy"),
+                                  jobs=jobs2, origin=origin2))
+        assert_metrics_equal(legacy, facade)
+
+
+class TestRunSpecSurface:
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError, match="unknown RunSpec.kind"):
+            simulate(RunSpec(kind="nope"))
+
+    def test_kinds_is_exhaustive(self):
+        assert set(KINDS) == {"baseline", "scheme_a", "scheme_b",
+                              "serving", "fleet", "cluster"}
+
+
+class TestCuratedSurface:
+    def test_all_exports_resolve(self):
+        for name in repro.__all__:
+            assert getattr(repro, name) is not None
+
+    def test_exports_point_at_home_modules(self):
+        from repro.api import RunSpec as direct_spec
+        from repro.control import ControlPlane as direct_plane
+        assert repro.RunSpec is direct_spec
+        assert repro.ControlPlane is direct_plane
+
+    def test_deprecated_alias_warns_once_and_resolves(self):
+        # drop any cached resolution so __getattr__ runs again
+        repro.__dict__.pop("run_fleet", None)
+        with warnings.catch_warnings(record=True) as seen:
+            warnings.simplefilter("always")
+            first = repro.run_fleet
+            second = repro.run_fleet
+        deprecations = [w for w in seen
+                        if issubclass(w.category, DeprecationWarning)]
+        assert len(deprecations) == 1
+        assert "repro.api.simulate" in str(deprecations[0].message)
+        assert first is second is run_fleet
+
+    def test_unknown_attribute_raises(self):
+        with pytest.raises(AttributeError):
+            repro.no_such_name

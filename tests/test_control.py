@@ -1,0 +1,187 @@
+"""Tests for the control plane (ISSUE 9): lease lifecycle, admission-gated
+provisioning with a deferred queue, deterministic ledger replay, and the
+``python -m repro.control`` CLI."""
+
+import json
+
+import pytest
+
+from repro.control import DEFAULT_LEASE_S, ControlPlane, Lease
+from repro.control.__main__ import main as cli_main
+from repro.core.scheduler.admission import AdmissionController
+from repro.obs import Tracer
+
+
+class TestLifecycle:
+    def test_provision_grants_a_busy_slice(self):
+        plane = ControlPlane(["a100"])
+        lease = plane.provision("w", 20.0, compute=0.4, t=0.0)
+        assert isinstance(lease, Lease)
+        assert lease.profile in ("3g.20gb", "4g.20gb")
+        assert lease.expires_t == DEFAULT_LEASE_S
+        dev = plane.devices[0]
+        assert len(dev.pm.live) == 1
+        assert next(iter(dev.pm.live.values())).busy
+
+    def test_duplicate_name_rejected(self):
+        plane = ControlPlane(["a100"])
+        plane.provision("w", 5.0)
+        with pytest.raises(ValueError, match="already exists"):
+            plane.provision("w", 5.0)
+
+    def test_impossible_request_rejected_not_queued(self):
+        plane = ControlPlane(["a100"])
+        with pytest.raises(ValueError, match="largest profile"):
+            plane.provision("huge", 400.0)
+        assert not plane.deferred
+
+    def test_heartbeat_renews_and_tick_expires(self):
+        plane = ControlPlane(["a100"], default_lease_s=30.0)
+        plane.provision("w", 5.0, t=0.0)
+        plane.heartbeat("w", t=20.0)            # expiry pushed to 50
+        assert plane.tick(t=45.0) == []
+        assert plane.tick(t=50.0) == ["w"]
+        assert "w" not in plane.leases
+        assert not plane.devices[0].pm.live    # the slice was reclaimed
+        with pytest.raises(KeyError):
+            plane.heartbeat("w", t=55.0)       # lapsed: must re-provision
+
+    def test_extend_lease_is_additive_under_load(self):
+        """Extension banks time without resetting the window, and works
+        while the device is fully packed by other leases."""
+        plane = ControlPlane(["a100"], default_lease_s=30.0)
+        plane.provision("big", 20.0, t=0.0)
+        plane.provision("side", 10.0, t=0.0)
+        plane.provision("slim", 5.0, t=0.0)
+        lease = plane.extend_lease("slim", 100.0, t=10.0)
+        assert lease.expires_t == 130.0        # 30 + 100, not 10 + 100
+        assert lease.n_extensions == 1
+        assert plane.tick(t=31.0) == ["big", "side"]
+        assert sorted(plane.leases) == ["slim"]
+
+    def test_release_frees_fsm_capacity(self):
+        plane = ControlPlane(["a100"])
+        plane.provision("a", 20.0)
+        plane.provision("b", 20.0)
+        assert plane.provision("c", 20.0) is None   # A100: no third 20gb
+        plane.release("a")
+        # the deferred ask was retried against the freed capacity
+        assert "c" in plane.leases
+        assert plane.status()["counters"]["deferred"] == 1
+
+    def test_release_unknown_raises_but_deferred_drops(self):
+        plane = ControlPlane(["a100"])
+        with pytest.raises(KeyError):
+            plane.release("ghost")
+        plane.provision("a", 20.0)
+        plane.provision("b", 20.0)
+        plane.provision("c", 20.0)                  # queued
+        plane.release("c")                          # drops from the queue
+        assert not plane.deferred
+
+    def test_clock_is_monotone(self):
+        plane = ControlPlane(["a100"])
+        plane.provision("w", 5.0, t=100.0)
+        plane.heartbeat("w", t=50.0)   # stale timestamp cannot rewind
+        assert plane.t == 100.0
+
+
+class TestAdmissionGate:
+    def test_burst_defers_then_quiet_retry_grants(self):
+        plane = ControlPlane(["a100"],
+                             admission=AdmissionController(horizon_s=30.0))
+        granted = [plane.provision(f"w{i}", 20.0, t=float(i)) is not None
+                   for i in range(6)]
+        assert granted[0] and not all(granted)
+        assert plane.deferred
+        deferred_before = len(plane.deferred)
+        # a long-quiet release decays the forecast; the retry then grants
+        plane.release("w0", t=500.0)
+        assert len(plane.leases) >= 1
+        assert len(plane.deferred) < deferred_before
+
+    def test_tracer_sees_lease_events(self):
+        tracer = Tracer()
+        plane = ControlPlane(["a100"], tracer=tracer,
+                             default_lease_s=10.0)
+        plane.provision("w", 5.0, t=0.0)
+        plane.heartbeat("w", t=5.0)
+        plane.tick(t=20.0)
+        names = [r["name"] for r in tracer.records
+                 if r.get("cat") == "lease"]
+        assert names == ["lease.grant", "lease.heartbeat", "lease.expire"]
+
+
+class TestLedgerReplay:
+    OPS = [
+        {"op": "provision", "name": "a", "mem_gb": 20.0, "t": 0.0},
+        {"op": "provision", "name": "b", "mem_gb": 10.0, "t": 5.0,
+         "lease_s": 120.0},
+        {"op": "heartbeat", "name": "a", "t": 30.0},
+        {"op": "extend_lease", "name": "b", "extra_s": 60.0, "t": 40.0},
+        {"op": "tick", "t": 95.0},
+        {"op": "release", "name": "b", "t": 100.0},
+        {"op": "provision", "name": "c", "mem_gb": 5.0, "t": 110.0},
+    ]
+
+    def test_replay_reproduces_status_exactly(self):
+        live = ControlPlane(["a100", "a100"])
+        for op in self.OPS:
+            live.apply(op)
+        replayed = ControlPlane(["a100", "a100"])
+        replayed.replay(self.OPS)
+        assert replayed.status() == live.status()
+        # not just JSON-equal: the FSM states themselves match
+        for d1, d2 in zip(live.devices, replayed.devices):
+            assert d1.pm.state == d2.pm.state
+            assert d1.pm.n_reconfigs == d2.pm.n_reconfigs
+
+    def test_unknown_op_raises(self):
+        with pytest.raises(ValueError, match="unknown ledger op"):
+            ControlPlane(["a100"]).apply({"op": "destroy"})
+
+
+class TestCli:
+    def _run(self, tmp_path, *argv):
+        return cli_main(["--state", str(tmp_path / "plane.json"), *argv])
+
+    def test_provision_status_release_round_trip(self, tmp_path, capsys):
+        assert self._run(tmp_path, "--devices", "a100,a100", "provision",
+                         "--name", "train", "--mem-gb", "20",
+                         "--lease-s", "120") == 0
+        lease = json.loads(capsys.readouterr().out)
+        assert lease["name"] == "train" and lease["device"] == "a100-0"
+        assert self._run(tmp_path, "status") == 0
+        assert "lease train" in capsys.readouterr().out
+        assert self._run(tmp_path, "status", "--json") == 0
+        snap = json.loads(capsys.readouterr().out)
+        assert snap["counters"]["provisioned"] == 1
+        assert self._run(tmp_path, "release", "--name", "train") == 0
+        capsys.readouterr()   # drop the released lease's json
+        assert self._run(tmp_path, "status", "--json") == 0
+        assert json.loads(capsys.readouterr().out)["leases"] == []
+        # the ledger on disk is the full op history
+        ledger = json.loads((tmp_path / "plane.json").read_text())
+        assert [op["op"] for op in ledger["ops"]] == ["provision", "release"]
+
+    def test_tick_expires_and_heartbeat_extends(self, tmp_path, capsys):
+        self._run(tmp_path, "provision", "--name", "w", "--mem-gb", "5",
+                  "--lease-s", "60")
+        self._run(tmp_path, "heartbeat", "--name", "w", "--t", "50")
+        assert self._run(tmp_path, "tick", "--t", "100") == 0
+        assert json.loads(capsys.readouterr().out.splitlines()[-1]) == []
+        assert self._run(tmp_path, "tick", "--t", "111") == 0
+        assert json.loads(capsys.readouterr().out) == ["w"]
+
+    def test_failed_op_not_recorded(self, tmp_path, capsys):
+        self._run(tmp_path, "provision", "--name", "w", "--mem-gb", "5")
+        assert self._run(tmp_path, "release", "--name", "ghost") == 1
+        assert "error" in capsys.readouterr().err
+        ledger = json.loads((tmp_path / "plane.json").read_text())
+        assert [op["op"] for op in ledger["ops"]] == ["provision"]
+
+    def test_device_shape_is_immutable(self, tmp_path, capsys):
+        self._run(tmp_path, "--devices", "a100", "provision",
+                  "--name", "w", "--mem-gb", "5")
+        with pytest.raises(SystemExit):
+            self._run(tmp_path, "--devices", "h100", "status")

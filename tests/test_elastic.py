@@ -1,0 +1,253 @@
+"""The elasticity closed loop (ISSUE 9): headroom-forecast Shrink plans,
+admission-gated serving growth, plan-ahead carving, and exact FSM state
+round-trips across grow -> shrink -> grow cycles."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mig_a100 import MigA100Backend
+from repro.core.mig_h100 import MigH100Backend
+from repro.core.partition_manager import PartitionManager
+from repro.core.planner import (SCHEME_B_COST, PartitionPlanner, Shrink,
+                                Wait, carve_homogeneous, grow_request,
+                                plan_carve, serving_shrink_cost,
+                                shrink_ladder, shrink_request)
+from repro.core.scheduler.admission import AdmissionController
+from repro.serving.sim import (ServingConfig, diurnal_requests,
+                               poisson_requests, run_serving)
+
+SHRINK_COST = serving_shrink_cost()
+
+
+def _savings(backend, current, watts_per_fraction=300.0):
+    """Generous per-rung savings, zero forecast risk: the planner should
+    always pick the deepest feasible rung under these inputs."""
+    saved = {p.name: watts_per_fraction *
+             (current.compute_fraction - p.compute_fraction)
+             for p in backend.profiles}
+    return saved, {p.name: 0.0 for p in backend.profiles}
+
+
+class TestShrinkPlanning:
+    def test_deep_shrink_wins_when_risk_free(self):
+        backend = MigA100Backend()
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        big = pm.allocate(backend.profiles[-1])     # 7g.40gb
+        saved, risk = _savings(backend, big.profile)
+        plan = planner.plan(shrink_request(backend, big, 5.0, saved, risk),
+                            model=SHRINK_COST)
+        assert isinstance(plan.action, Shrink)
+        result = planner.execute(plan)
+        assert result.partition.profile.name == "1g.5gb"
+        assert plan.action.released.profile.name == "7g.40gb"
+
+    def test_risky_shrink_stays_put(self):
+        backend = MigA100Backend()
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        big = pm.allocate(backend.profiles[-1])
+        saved = {p.name: 1.0 for p in backend.profiles}   # negligible W
+        risk = {p.name: 0.9 for p in backend.profiles}    # likely wrong
+        state0, n0 = pm.state, pm.n_reconfigs
+        plan = planner.plan(shrink_request(backend, big, 5.0, saved, risk),
+                            model=SHRINK_COST)
+        result = planner.execute(plan)
+        # the stay candidate won: exact no-op, same live partition back
+        assert isinstance(result.action, Wait)
+        assert result.partition is big
+        assert pm.state == state0 and pm.n_reconfigs == n0
+
+    def test_shrink_ladder_respects_floor(self):
+        backend = MigA100Backend()
+        big = backend.profiles[-1]
+        rungs = shrink_ladder(backend, big, 12.0)
+        assert rungs and all(p.mem_gb >= 12.0 for p in rungs)
+        assert all(p.mem_gb < big.mem_gb for p in rungs)
+        # deepest rung first: ascending memory, then ascending compute
+        assert [p.mem_gb for p in rungs] == sorted(p.mem_gb for p in rungs)
+
+
+class TestGrowShrinkRoundTrip:
+    """grow -> shrink -> grow on an otherwise-empty device is an exact FSM
+    round-trip: intermediate frees are exact inverses, placements are the
+    deterministic argmax, so the state tuple itself is restored."""
+
+    # profiles that are the minimal-compute rung of their memory class —
+    # the rung a risk-free deep shrink deterministically lands on
+    A100_MINIMAL = ["1g.5gb", "2g.10gb", "3g.20gb", "7g.40gb"]
+
+    @settings(max_examples=40, deadline=None)
+    @given(start=st.integers(min_value=0, max_value=2),
+           cycles=st.integers(min_value=1, max_value=4))
+    def test_state_restored_each_cycle(self, start, cycles):
+        backend = MigA100Backend()
+        by_name = {p.name: p for p in backend.profiles}
+        profile = by_name[self.A100_MINIMAL[start]]
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        part = pm.allocate(profile)
+        assert part is not None
+        state0 = pm.state
+        for _ in range(cycles):
+            grown = planner.execute(planner.plan(grow_request(
+                backend, part, backend.profiles[-1].mem_gb, 0.0)))
+            assert grown.partition.profile.mem_gb > profile.mem_gb
+            saved, risk = _savings(backend, grown.partition.profile)
+            shrunk = planner.execute(planner.plan(
+                shrink_request(backend, grown.partition, profile.mem_gb,
+                               saved, risk), model=SHRINK_COST))
+            part = shrunk.partition
+            assert part.profile.name == profile.name
+            assert pm.state == state0, "grow->shrink must restore the FSM"
+        pm.release(part)
+        assert pm.state == backend.initial_state()
+        assert not pm.live
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_replay_determinism(self, seed):
+        """The same op sequence on a fresh manager lands on the identical
+        state and reconfig count — what makes control-plane ledger replay
+        and Shrink-path state restoration exact rather than statistical."""
+        import random
+        rng = random.Random(seed)
+        ops = []
+        for _ in range(rng.randint(1, 8)):
+            ops.append(("alloc", rng.randrange(5)))
+            if rng.random() < 0.4:
+                ops.append(("release_oldest",))
+
+        def apply(pm):
+            parts = []
+            for op in ops:
+                if op[0] == "alloc":
+                    p = pm.allocate(pm.backend.profiles[op[1]])
+                    if p is not None:
+                        parts.append(p)
+                elif parts:
+                    pm.release(parts.pop(0))
+            return pm
+
+        a = apply(PartitionManager(MigA100Backend()))
+        b = apply(PartitionManager(MigA100Backend()))
+        assert a.state == b.state
+        assert a.n_reconfigs == b.n_reconfigs
+
+
+class TestServingShrink:
+    CFG = dict(policy="dynamic", n_engines=2, gauge="slo",
+               use_prediction=False)
+
+    def test_shrink_fires_on_diurnal_troughs(self):
+        cfg = ServingConfig(**self.CFG, scale_down_ticks=30)
+        m = run_serving(["a100"], cfg,
+                        diurnal_requests(200, peak_rate_per_s=1.5,
+                                         trough_rate_per_s=0.05,
+                                         period_s=200.0, seed=7))
+        assert m.n_completed == 200 and m.n_dropped == 0
+        assert m.n_shrinks >= 1
+        assert "+shrink" in cfg.name
+
+    def test_scale_down_zero_is_inert(self):
+        """The default keeps the pre-elasticity trajectory bit-for-bit."""
+        def reqs():
+            return diurnal_requests(120, 1.5, 0.1, 150.0, seed=3)
+        base = run_serving(["a100"], ServingConfig(**self.CFG), reqs())
+        again = run_serving(["a100"], ServingConfig(**self.CFG,
+                                                    scale_down_ticks=0),
+                            reqs())
+        assert base.n_shrinks == again.n_shrinks == 0
+        assert base.energy_j == again.energy_j
+        assert base.makespan == again.makespan
+
+    def test_queue_tick_gauge_never_shrinks(self):
+        """Only the predictive gauge reports headroom; the golden-pinned
+        queue-tick emulation must never scale down even when asked."""
+        cfg = ServingConfig(policy="dynamic", n_engines=2,
+                            gauge="queue_ticks", use_prediction=False,
+                            scale_down_ticks=5)
+        m = run_serving(["a100"], cfg,
+                        diurnal_requests(120, 1.5, 0.05, 150.0, seed=3))
+        assert m.n_shrinks == 0
+
+
+class TestServingAdmissionGate:
+    def test_defer_counter_increments_under_floor_pressure(self):
+        adm = AdmissionController(horizon_s=1000.0)
+        cfg = ServingConfig(policy="dynamic", n_engines=2, gauge="slo",
+                            scale_up_queue_ticks=5, use_prediction=False)
+        m = run_serving(["a100"], cfg,
+                        poisson_requests(300, rate_per_s=6.0, seed=3),
+                        admission=adm)
+        assert m.n_completed == 300
+        assert m.n_grow_deferrals >= 1
+
+    def test_no_admission_means_no_deferrals(self):
+        cfg = ServingConfig(policy="dynamic", n_engines=2, gauge="slo",
+                            scale_up_queue_ticks=5, use_prediction=False)
+        m = run_serving(["a100"], cfg,
+                        poisson_requests(300, rate_per_s=6.0, seed=3))
+        assert m.n_grow_deferrals == 0
+
+
+class TestPlanAhead:
+    @settings(max_examples=30, deadline=None)
+    @given(backend_cls=st.sampled_from([MigA100Backend, MigH100Backend]),
+           mem_idx=st.integers(min_value=0, max_value=3),
+           prefill=st.lists(st.integers(min_value=0, max_value=4),
+                            max_size=3))
+    def test_beam_never_carves_fewer_or_weaker(self, backend_cls, mem_idx,
+                                               prefill):
+        """plan_carve always scores the greedy chain, so on any reachable
+        state it carves at least as many slices and at least as much
+        total compute as the greedy per-slice loop."""
+        def build():
+            pm = PartitionManager(backend_cls())
+            for i in prefill:
+                pm.allocate(pm.backend.profiles[i])   # may fail: fine
+            return pm
+
+        pm_greedy, pm_beam = build(), build()
+        mems = sorted({p.mem_gb for p in pm_greedy.backend.profiles})
+        mem = mems[min(mem_idx, len(mems) - 1)]
+        same_mem = sorted([p for p in pm_greedy.backend.profiles
+                           if p.mem_gb == mem],
+                          key=lambda p: -p.compute_fraction)
+
+        greedy = []
+        while True:
+            part = None
+            for prof in same_mem:
+                part = pm_greedy.allocate(prof)
+                if part is not None:
+                    break
+            if part is None:
+                break
+            greedy.append(part)
+
+        beam = carve_homogeneous(pm_beam, same_mem, beam_width=8)
+        assert len(beam) >= len(greedy)
+        assert (sum(p.profile.compute_fraction for p in beam) >=
+                sum(p.profile.compute_fraction for p in greedy) - 1e-12)
+
+    def test_beam_width_one_matches_greedy_exactly(self):
+        pm_a, pm_b = (PartitionManager(MigA100Backend()) for _ in range(2))
+        profs = sorted([p for p in pm_a.backend.profiles
+                        if p.mem_gb == 20.0],
+                       key=lambda p: -p.compute_fraction)
+        chain = plan_carve(pm_a, profs, beam_width=1)
+        greedy = []
+        while True:
+            part = None
+            for prof in profs:
+                part = pm_b.allocate(prof)
+                if part is not None:
+                    break
+            if part is None:
+                break
+            greedy.append(part)
+        committed = [pm_a._commit(pl) for pl in chain]
+        assert [p.profile.name for p in committed] == \
+            [p.profile.name for p in greedy]
+        assert pm_a.state == pm_b.state
