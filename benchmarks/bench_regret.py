@@ -1,0 +1,167 @@
+"""Regret-vs-oracle gate: every policy replayed against the offline DP.
+
+Runs the fig4 batch mixes through baseline / scheme A / scheme B on one
+A100 and through the fleet routers on 2xA100, solves the offline regret
+oracle (:mod:`repro.core.planner.oracle`) for each mix, and
+**hard-asserts the structural guarantees**:
+
+* makespan regret >= 0 for *every* arm (the oracle is a true lower
+  bound: clairvoyant memory, no IO contention, free reconfiguration);
+* energy regret >= 0 for the single-device arms (idle floor x oracle
+  makespan + work-conserving dynamic Joules; fleet arms are excluded —
+  power-gating can legally undercut the ungated idle floor);
+* scheme B's makespan regret <= baseline's on every mix (the planner
+  must never be further from optimal than the no-partitioning strawman);
+* the DP is **provably exact** (memo drained within budget) on at least
+  ``MIN_EXACT`` of the mixes — the yardstick is ground truth, not just
+  a bound.
+
+One scheme-B run is traced and replayed end to end
+(:func:`repro.obs.replay.trace_regret`) so the per-decision attribution
+path is exercised under the same gate; set ``REGRET_TRACE_OUT`` to keep
+the trace JSONL.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core.mig_a100 import make_backend
+from repro.core.planner.oracle import (BatchOracle,
+                                       admissible_lower_bound_s,
+                                       classes_from_jobs,
+                                       energy_lower_bound_j)
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.policies import (run_baseline, run_scheme_a,
+                                           run_scheme_b)
+from repro.fleet import make_fleet, make_router, run_fleet
+from repro.obs import Tracer
+from repro.obs.replay import load_replay, trace_regret
+
+from benchmarks.mixes import rodinia_mix
+
+MIXES = ("Hm3", "Hm4", "Ht1")
+FLEET_SHAPE = ["a100", "a100"]
+FLEET_ROUTERS = ("best_fit", "energy_aware")
+SEED = 7
+NODE_BUDGET = 200_000
+MIN_EXACT = 2       # mixes on which the DP must drain (provable optimum)
+EPS = 1e-6          # one oracle duration quantum (integer-µs floor)
+
+#: the mix whose scheme-B run is traced and replayed for attribution
+ATTRIBUTION_MIX = "Hm3"
+
+
+def _single_device_arms(mix_name: str, backend, tracer=None):
+    yield "baseline", run_baseline(rodinia_mix(mix_name), backend,
+                                   A100_POWER)
+    yield "scheme_a", run_scheme_a(rodinia_mix(mix_name), backend,
+                                   A100_POWER, use_prediction=False)
+    yield "scheme_b", run_scheme_b(rodinia_mix(mix_name), backend,
+                                   A100_POWER, tracer=tracer)
+
+
+def run(csv_rows: list) -> dict:
+    backend = make_backend()
+    print("\n=== regret vs offline oracle: fig4 mixes, all arms ===")
+    print(f"{'mix':<5} {'oracle_s':>9} {'kind':<6} {'arm':<20} "
+          f"{'makespan':>9} {'regret_s':>9} {'E_regret':>9}")
+    n_exact = 0
+    t_wall = time.perf_counter()
+    out: dict = {"mixes": {}}
+    trace_path = os.environ.get("REGRET_TRACE_OUT") or os.path.join(
+        tempfile.gettempdir(), "bench_regret_trace.jsonl")
+
+    for mix_name in MIXES:
+        classes = classes_from_jobs(rodinia_mix(mix_name))
+        oracle = BatchOracle(backend, classes, node_budget=NODE_BUDGET)
+        result = oracle.solve()
+        kind = "exact" if result.exact else "bound"
+        n_exact += result.exact
+        e_lb = energy_lower_bound_j(A100_POWER, classes, result.makespan_s)
+        regrets: dict[str, float] = {}
+
+        tracer = (Tracer(meta={"policy": "scheme_b", "mix": mix_name})
+                  if mix_name == ATTRIBUTION_MIX else None)
+        for arm, m in _single_device_arms(mix_name, backend, tracer):
+            regret = m.makespan - result.makespan_s
+            e_regret = m.energy_j - e_lb
+            regrets[arm] = regret
+            print(f"{mix_name:<5} {result.makespan_s:9.3f} {kind:<6} "
+                  f"{arm:<20} {m.makespan:9.3f} {regret:9.3f} "
+                  f"{e_regret:9.1f}")
+            assert regret >= -EPS, (
+                f"{mix_name}/{arm}: makespan {m.makespan:.6f}s beats the "
+                f"oracle lower bound {result.makespan_s:.6f}s — the "
+                f"relaxation is unsound")
+            assert e_regret >= -EPS, (
+                f"{mix_name}/{arm}: energy {m.energy_j:.1f}J beats the "
+                f"admissible bound {e_lb:.1f}J")
+            csv_rows.append(
+                (f"regret.{mix_name}.{arm}.makespan_regret_s", 0.0,
+                 f"{regret:.4f}"))
+        if tracer is not None:
+            tracer.write_jsonl(trace_path)
+
+        fleet_lb = admissible_lower_bound_s(backend, classes,
+                                            n_devices=len(FLEET_SHAPE))
+        for router in FLEET_ROUTERS:
+            m = run_fleet(make_fleet(FLEET_SHAPE),
+                          make_router(router, seed=SEED),
+                          rodinia_mix(mix_name))
+            arm = f"fleet_{router}"
+            regret = m.makespan - fleet_lb
+            regrets[arm] = regret
+            print(f"{mix_name:<5} {fleet_lb:9.3f} bound  {arm:<20} "
+                  f"{m.makespan:9.3f} {regret:9.3f} {'-':>9}")
+            assert regret >= -EPS, (
+                f"{mix_name}/{arm}: makespan {m.makespan:.6f}s beats the "
+                f"{len(FLEET_SHAPE)}-device area bound {fleet_lb:.6f}s")
+            csv_rows.append(
+                (f"regret.{mix_name}.{arm}.makespan_regret_s", 0.0,
+                 f"{regret:.4f}"))
+
+        assert regrets["scheme_b"] <= regrets["baseline"] + EPS, (
+            f"{mix_name}: scheme_b regret {regrets['scheme_b']:.4f}s "
+            f"exceeds baseline regret {regrets['baseline']:.4f}s — the "
+            f"planner lost to the no-partitioning strawman")
+        out["mixes"][mix_name] = {
+            "oracle_s": result.makespan_s, "exact": result.exact,
+            "dp_nodes": result.nodes, "energy_lb_j": e_lb,
+            "regrets_s": regrets}
+
+    assert n_exact >= MIN_EXACT, (
+        f"DP drained on only {n_exact} mixes (< {MIN_EXACT}): the oracle "
+        f"no longer proves optimality — raise the budget or fix the DP")
+    print(f"\nexact DP optimum on {n_exact}/{len(MIXES)} mixes "
+          f"(floor {MIN_EXACT})")
+    csv_rows.append(("regret.n_exact_mixes", 0.0, f"{n_exact}"))
+
+    # replay the traced scheme-B run: per-decision attribution must grade
+    # and every graded decision's regret must be non-negative
+    reg = trace_regret(load_replay(trace_path), node_budget=NODE_BUDGET)
+    graded = [d for d in reg.decisions if d.regret_s is not None]
+    assert graded, "attribution graded zero decisions on an exact mix"
+    worst = max(d.regret_s for d in graded)
+    for d in graded:
+        assert d.regret_s >= -1e-9, (
+            f"per-decision regret {d.regret_s} < 0 at t={d.t}: Q and V "
+            f"disagree over the same DP node")
+    n_div = sum(1 for d in graded if d.diverged)
+    print(f"attribution ({ATTRIBUTION_MIX}, scheme_b): {len(graded)} "
+          f"decisions graded, {n_div} diverged, worst single-decision "
+          f"regret {worst:.3f}s")
+    csv_rows.append(("regret.attribution.graded", 0.0, f"{len(graded)}"))
+
+    dt = time.perf_counter() - t_wall
+    print(f"bench wall time {dt:.1f}s")
+    out.update({"n_exact": n_exact, "n_graded": len(graded),
+                "n_diverged": n_div, "worst_decision_regret_s": worst,
+                "trace_path": trace_path})
+    return out
+
+
+if __name__ == "__main__":
+    run([])

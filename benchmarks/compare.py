@@ -85,6 +85,14 @@ WATCHED: dict[str, list[tuple[str, str]]] = {
         ("router.256.best_fit.speedup", "higher"),
         ("router.256.energy_aware.speedup", "higher"),
     ],
+    # distance-to-the-offline-optimum in simulated seconds: fully
+    # deterministic, and the one number a scheduling PR must not regress
+    "regret": [
+        ("regret.Hm3.scheme_b.makespan_regret_s", "lower"),
+        ("regret.Hm4.scheme_b.makespan_regret_s", "lower"),
+        ("regret.Ht1.scheme_b.makespan_regret_s", "lower"),
+        ("regret.n_exact_mixes", "higher"),
+    ],
 }
 
 

@@ -20,8 +20,8 @@ from benchmarks import (bench_breakdown, bench_cluster, bench_elastic,
                         bench_fig4_general, bench_fig4_ml, bench_fleet,
                         bench_kernel, bench_kernels, bench_obs,
                         bench_planner, bench_predictor, bench_reachability,
-                        bench_roofline, bench_router, bench_serving,
-                        bench_slo, bench_tpu_pod)
+                        bench_regret, bench_roofline, bench_router,
+                        bench_serving, bench_slo, bench_tpu_pod)
 
 #: Bump when the BENCH_<name>.json layout changes incompatibly;
 #: ``benchmarks/compare.py`` refuses baselines from another schema.
@@ -45,6 +45,7 @@ BENCHES = {
     "obs": bench_obs.run,                     # flight-recorder overhead bound
     "kernel": bench_kernel.run,               # event-kernel events/sec gates
     "router": bench_router.run,               # routing index dispatches/sec
+    "regret": bench_regret.run,               # all arms vs the offline oracle
 }
 
 

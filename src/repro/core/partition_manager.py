@@ -107,6 +107,13 @@ class PartitionManager:
         self.n_reconfigs += 1
         return part
 
+    def commit_placement(self, placement: Placement) -> Partition:
+        """Commit an externally-chosen :class:`Placement` — the public hook
+        the planner's ``execute``, the look-ahead carve and the regret
+        oracle's replay all go through.  Accounting matches ``allocate``
+        exactly: one reconfiguration per committed slice."""
+        return self._commit(placement)
+
     def release(self, part: Partition) -> None:
         """free(x) — trivial online deallocation (paper §4.2)."""
         self.state = self.backend.free(self.state, part.handle)

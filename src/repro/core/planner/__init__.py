@@ -18,7 +18,10 @@ single decision procedure:
 * :mod:`~repro.core.planner.lookahead` — k-step plan-ahead carving over
   the compiled graph (bounded beam, never worse than greedy),
 * :mod:`~repro.core.planner.planner` — ``PartitionPlanner.plan/execute``
-  returning an explainable :class:`Plan`.
+  returning an explainable :class:`Plan`,
+* :mod:`~repro.core.planner.oracle` — the offline regret oracle: an
+  exact DP optimum over the compiled graph, admissible closed-form
+  bounds, and per-decision regret attribution for replayed audits.
 """
 
 from repro.core.planner.actions import (Action, FreshAllocate, Grow, Migrate,
@@ -42,21 +45,36 @@ from repro.core.planner.ladders import (grow_ladder, grow_request,
                                         tight_profile)
 from repro.core.planner.lookahead import (DEFAULT_BEAM_WIDTH,
                                           carve_homogeneous, plan_carve)
+from repro.core.planner.oracle import (BatchOracle, DecisionRegret,
+                                       GrowWaitBound, OracleClass,
+                                       OracleResult,
+                                       admissible_lower_bound_s,
+                                       attribute_decisions,
+                                       classes_from_jobs,
+                                       classes_from_specs,
+                                       energy_lower_bound_j,
+                                       grow_wait_sequence_bound,
+                                       solve_batch_oracle)
 from repro.core.planner.planner import (Candidate, PartitionPlanner, Plan,
                                         PlanRequest, PlanResult)
 
 __all__ = [
-    "Action", "BEST_FIT_DEVICE_COST", "Candidate", "CostModel", "CostTerms",
-    "DEFAULT_BEAM_WIDTH", "ENERGY_AWARE_DEVICE_COST",
+    "Action", "BEST_FIT_DEVICE_COST", "BatchOracle", "Candidate",
+    "CostModel", "CostTerms",
+    "DEFAULT_BEAM_WIDTH", "DecisionRegret", "ENERGY_AWARE_DEVICE_COST",
     "FOLLOW_THE_SUN_ZONE_COST", "FreshAllocate",
-    "Grow", "Migrate", "PRICE_GREEDY_ZONE_COST",
+    "Grow", "GrowWaitBound", "Migrate", "OracleClass", "OracleResult",
+    "PRICE_GREEDY_ZONE_COST",
     "PartitionPlanner", "Plan", "PlanRequest", "PlanResult",
     "ReshapeFuseFission", "ReuseIdle", "SCHEME_B_COST", "SERVING_GROW_COST",
     "SERVING_SHRINK_COST", "SHRINK_HORIZON_S", "SHRINK_TRADE_W",
     "SLO_MISS_PENALTY_S", "Shrink", "TransitionGraph", "Wait",
-    "carve_homogeneous", "compile_transition_graph", "grow_ladder",
-    "grow_request", "normalized_reachability", "place_request",
+    "admissible_lower_bound_s", "attribute_decisions", "carve_homogeneous",
+    "classes_from_jobs", "classes_from_specs", "compile_transition_graph",
+    "energy_lower_bound_j", "grow_ladder",
+    "grow_request", "grow_wait_sequence_bound", "normalized_reachability",
+    "place_request",
     "placement_ladder", "plan_carve", "predicted_rung", "restart_rung",
     "serving_grow_cost", "serving_shrink_cost", "shrink_ladder",
-    "shrink_request", "tight_profile",
+    "shrink_request", "solve_batch_oracle", "tight_profile",
 ]

@@ -83,7 +83,23 @@ class CostModel:
     weights: tuple
 
     def cost(self, terms: CostTerms) -> tuple[float, ...]:
-        return tuple(_tier_value(t, terms) for t in self.weights)
+        values = tuple(_tier_value(t, terms) for t in self.weights)
+        for v in values:
+            if not math.isfinite(v):
+                raise ValueError(self._non_finite_message(terms))
+        return values
+
+    def _non_finite_message(self, terms: CostTerms) -> str:
+        """Name the offending feature(s): a NaN anywhere in a cost tuple
+        makes lexicographic comparison order-dependent (NaN compares false
+        both ways), so the tuple must never be built."""
+        bad = [f"{f.name}={getattr(terms, f.name)!r}"
+               for f in dataclasses.fields(terms)
+               if not math.isfinite(getattr(terms, f.name))]
+        detail = ", ".join(bad) if bad else "a non-finite tier weight"
+        return (f"non-finite cost feature for model {self.name!r}: {detail} "
+                f"— lexicographic candidate comparison would be "
+                f"order-dependent")
 
     def explain(self, terms: CostTerms) -> str:
         def label(tier) -> str:

@@ -20,6 +20,7 @@ slices than the loop it replaces.  Backends without a compiled graph
 
 from __future__ import annotations
 
+import math
 from typing import Hashable, Sequence
 
 from repro.core.partition_manager import Partition, PartitionManager
@@ -37,9 +38,14 @@ def _chain_score(pm: PartitionManager, chain: tuple[Placement, ...],
     """Lexicographic value of a finished carve: slice count, then summed
     compute fraction (the batch-throughput proxy scheme A maximizes),
     then the end state's |F_s| (leave the device most reconfigurable)."""
-    return (float(len(chain)),
-            sum(p.profile.compute_fraction for p in chain),
-            float(pm.reach(state)))
+    compute = sum(p.profile.compute_fraction for p in chain)
+    if not math.isfinite(compute):
+        bad = [p.profile.name for p in chain
+               if not math.isfinite(p.profile.compute_fraction)]
+        raise ValueError(
+            f"non-finite compute_fraction in carve chain (profiles {bad}): "
+            f"chain scores would compare order-dependently")
+    return (float(len(chain)), compute, float(pm.reach(state)))
 
 
 def _greedy_chain(pm: PartitionManager, state: Hashable,
@@ -83,29 +89,31 @@ def plan_carve(pm: PartitionManager,
         return greedy
     end = greedy[-1].next_state if greedy else start
     best_chain, best_score = greedy, _chain_score(pm, greedy, end)
-    frontier: dict[Hashable, tuple[Placement, ...]] = {start: ()}
+    # frontier maps reached state -> (chain, its score): the incumbent's
+    # score is computed once when it enters the frontier, not re-derived
+    # for every competing candidate (or again by the beam-prune sort)
+    frontier: dict[Hashable, tuple[tuple[Placement, ...],
+                                   tuple[float, float, float]]] = {
+        start: ((), _chain_score(pm, (), start))}
     while frontier:
-        nxt: dict[Hashable, tuple[Placement, ...]] = {}
-        for state, chain in frontier.items():
+        nxt: dict[Hashable, tuple[tuple[Placement, ...],
+                                  tuple[float, float, float]]] = {}
+        for state, (chain, score) in frontier.items():
             terminal = True
             for prof in profiles:
                 for pl in graph.placements(state, prof):
                     terminal = False
                     ns = pl.next_state
                     grown = chain + (pl,)
+                    grown_score = _chain_score(pm, grown, ns)
                     prev = nxt.get(ns)
-                    if (prev is None or _chain_score(pm, grown, ns)
-                            > _chain_score(pm, prev, ns)):
-                        nxt[ns] = grown
-            if terminal:
-                score = _chain_score(pm, chain, state)
-                if score > best_score:
-                    best_score, best_chain = score, chain
+                    if prev is None or grown_score > prev[1]:
+                        nxt[ns] = (grown, grown_score)
+            if terminal and score > best_score:
+                best_score, best_chain = score, chain
         if len(nxt) > beam_width:
-            nxt = dict(sorted(
-                nxt.items(),
-                key=lambda kv: _chain_score(pm, kv[1], kv[0]),
-                reverse=True)[:beam_width])
+            nxt = dict(sorted(nxt.items(), key=lambda kv: kv[1][1],
+                              reverse=True)[:beam_width])
         frontier = nxt
     return best_chain
 
@@ -119,4 +127,5 @@ def carve_homogeneous(pm: PartitionManager,
     accounting matches the greedy loop exactly — one reconfiguration per
     slice — so swapping this in for a ``pm.allocate`` loop changes which
     placements are chosen, never how they are charged."""
-    return [pm._commit(pl) for pl in plan_carve(pm, profiles, beam_width)]
+    return [pm.commit_placement(pl)
+            for pl in plan_carve(pm, profiles, beam_width)]

@@ -219,7 +219,8 @@ class PartitionPlanner:
             # imported lazily: repro.obs.audit imports this module
             from repro.obs.audit import plan_audit_record
             self.tracer.audit(plan_audit_record(
-                plan, t=self.tracer.now(), device=self.owner))
+                plan, t=self.tracer.now(), device=self.owner,
+                state=pm.state, backend=backend))
         return plan
 
     @staticmethod
@@ -290,12 +291,12 @@ class PartitionPlanner:
             return PlanResult(partition=action.partition, setup_s=0.0,
                               action=action)
         if isinstance(action, FreshAllocate):
-            part = pm._commit(action.placement)
+            part = pm.commit_placement(action.placement)
         else:
             assert isinstance(action, ReshapeFuseFission)
             for p in action.consumed:
                 pm.release(p)
-            part = pm._commit(action.placement)
+            part = pm.commit_placement(action.placement)
             pm.n_reconfigs += len(action.consumed)
         if self.tracer is not None:
             self.tracer.instant(

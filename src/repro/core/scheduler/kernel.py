@@ -477,17 +477,44 @@ class EventKernel:
         self.awake_idle.discard(i)
         self.bump_epoch(device)
         if self.tracer is not None:
+            from repro.obs.audit import encode_handle
             profile = partition.profile
             self.tracer.span(
                 run.t_start, run.t_end, job.name, device=device.name,
                 lane=f"{profile.name}#{partition.pid}", cat="run",
                 outcome=run.plan.outcome, profile=profile.name,
-                mem_gb=job.mem_gb, setup_s=setup_s)
+                mem_gb=job.mem_gb, setup_s=setup_s,
+                handle=encode_handle(partition.handle))
         return run
 
     # -- staged arrivals ---------------------------------------------------
 
+    def _trace_job(self, job) -> None:
+        """One ``{"type": "job", ...}`` record per admitted batch job — the
+        workload spec (true peak memory, kernel/IO seconds, compute demand)
+        that makes a trace self-contained for the regret oracle's replay.
+        Non-Job queue items (serving requests) are skipped."""
+        tracer = self.tracer
+        if tracer is None or getattr(job, "t_kernel", None) is None:
+            return
+        traj = getattr(job, "trajectory", None)
+        if traj is not None:
+            mem_gb = traj.peak_phys / 1024 ** 3
+            t_kernel_s = traj.n_iters * traj.t_per_iter
+            t_io_s = 0.0
+        else:
+            mem_gb = job.mem_gb
+            t_kernel_s = job.t_kernel
+            t_io_s = job.t_io
+        tracer.emit({
+            "type": "job", "name": job.name, "arrival": job.arrival,
+            "mem_gb": mem_gb, "est_mem_gb": job.est_mem_gb,
+            "t_fixed": job.t_fixed, "t_kernel_s": t_kernel_s,
+            "t_io_s": t_io_s, "compute_demand": job.compute_demand,
+            "dynamic": traj is not None})
+
     def _admit_job(self, job) -> None:
+        self._trace_job(job)
         if self._stream:
             name = getattr(job, "name", None)
             if name in self._names_seen:
@@ -561,6 +588,8 @@ class EventKernel:
             if self.policy.online:
                 self.queue = [j for j in jobs if j.arrival <= 0.0]
                 self.n_jobs_seen = len(self.queue)
+                for j in self.queue:
+                    self._trace_job(j)
                 self._pending = iter(sorted(
                     (j for j in jobs if j.arrival > 0.0),
                     key=lambda j: j.arrival))
@@ -568,6 +597,8 @@ class EventKernel:
             else:
                 self.queue = list(jobs)
                 self.n_jobs_seen = len(jobs)
+                for j in self.queue:
+                    self._trace_job(j)
         self.policy.on_init(self, jobs)
 
         policy = self.policy

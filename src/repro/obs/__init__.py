@@ -6,6 +6,9 @@ streaming counters (ISSUE 6).
   chrome://tracing / Perfetto per-device Gantt rendering.
 * :mod:`repro.obs.audit` — flattens a planner :class:`Plan` into the
   replayable decision record the regret oracle consumes.
+* :mod:`repro.obs.replay` — streams a trace back into reconstructed
+  decision points and grades them against the offline oracle
+  (:func:`trace_regret`).
 * :mod:`repro.obs.counters` — :class:`Counter` / :class:`Gauge` /
   P² streaming quantiles (:class:`P2Quantile`, :class:`TailStats`) and
   a :class:`MetricsRegistry`.
@@ -16,15 +19,21 @@ kernel / orchestrator entry point) takes the exact pre-telemetry code
 path, pinned by the no-op parity tests.
 """
 
-from repro.obs.audit import deciding_tier, plan_audit_record, tier_labels
+from repro.obs.audit import (deciding_tier, deciding_tier_from_costs,
+                             decode_handle, decode_state, encode_handle,
+                             encode_state, plan_audit_record, tier_labels)
 from repro.obs.counters import (Counter, Gauge, MetricsRegistry, P2Quantile,
                                 TailStats)
+from repro.obs.replay import (DecisionPoint, Replay, TraceRegret,
+                              decision_points, load_replay, trace_regret)
 from repro.obs.trace import (SCHEMA, SCHEMA_VERSION, Tracer, read_jsonl,
                              to_chrome_trace, write_chrome_trace)
 
 __all__ = [
-    "Counter", "Gauge", "MetricsRegistry", "P2Quantile", "TailStats",
-    "SCHEMA", "SCHEMA_VERSION", "Tracer", "read_jsonl", "to_chrome_trace",
-    "write_chrome_trace", "deciding_tier", "plan_audit_record",
-    "tier_labels",
+    "Counter", "DecisionPoint", "Gauge", "MetricsRegistry", "P2Quantile",
+    "Replay", "TailStats", "SCHEMA", "SCHEMA_VERSION", "TraceRegret",
+    "Tracer", "deciding_tier", "deciding_tier_from_costs",
+    "decision_points", "decode_handle", "decode_state", "encode_handle",
+    "encode_state", "load_replay", "plan_audit_record", "read_jsonl",
+    "tier_labels", "to_chrome_trace", "trace_regret", "write_chrome_trace",
 ]

@@ -6,6 +6,13 @@ Exits non-zero with a clear message on a schema-version mismatch (the
 same refusal contract as ``benchmarks/compare.py``) so a stale trace
 never renders a silently-wrong summary.  ``--chrome out.json`` also
 writes the Chrome trace_event export for chrome://tracing / Perfetto.
+
+``--regret`` replays the trace against the offline oracle
+(:mod:`repro.core.planner.oracle`): total makespan regret vs the exact
+DP optimum (or the admissible bound when the DP's node budget trips),
+a per-decision attribution table (audited action vs the oracle's best
+continuation, with the recorded deciding tier), and the serving
+grow/wait sequence bound.
 """
 
 from __future__ import annotations
@@ -114,6 +121,56 @@ def render(header: dict[str, Any], records: list[dict[str, Any]],
     return "\n".join(out)
 
 
+def render_regret(path: str, *, node_budget: int | None = None,
+                  attribution_limit: int | None = None,
+                  top_k: int = 5) -> str:
+    """The ``--regret`` section: oracle gap + per-decision attribution."""
+    from repro.obs.replay import load_replay, trace_regret
+    replay = load_replay(path)
+    reg = trace_regret(replay, node_budget=node_budget,
+                       attribution_limit=attribution_limit)
+    out = ["\n== regret vs offline oracle =="]
+    if reg.oracle is None:
+        out.append("(no replayable batch workload: trace carries no job "
+                   "records or no recognized backend)")
+    else:
+        o = reg.oracle
+        kind = ("exact DP optimum" if o.exact
+                else "admissible lower bound (DP node budget exceeded)")
+        out.append(f"policy {reg.policy or '?'} on {reg.backend_name}: "
+                   f"{o.n_jobs} jobs in {o.n_classes} classes")
+        out.append(f"  oracle ({kind}): {o.makespan_s:.4f}s "
+                   f"[closed-form bound {o.bound_s:.4f}s, "
+                   f"{o.nodes} DP nodes]")
+        if reg.makespan_s is not None:
+            out.append(f"  traced makespan: {reg.makespan_s:.4f}s  ->  "
+                       f"regret {reg.makespan_regret_s:+.4f}s "
+                       f"({reg.makespan_regret_s / o.makespan_s:+.1%})")
+    graded = [d for d in reg.decisions if d.regret_s is not None]
+    if graded:
+        out.append(f"\n-- per-decision attribution ({len(graded)} graded "
+                   f"of {len(reg.decisions)} audited) --")
+        worst = sorted(graded, key=lambda d: -d.regret_s)[:top_k]
+        out.append(f"  {'t':>8s}  {'regret_s':>9s}  {'tier':24s} "
+                   f"audited -> optimal")
+        for d in worst:
+            out.append(f"  {d.t:8.2f}  {d.regret_s:9.4f}  "
+                       f"{(d.deciding_tier_label or '-'):24s} "
+                       f"{d.audited} -> {d.optimal}")
+        n_div = sum(1 for d in graded if d.diverged)
+        total = sum(d.regret_s for d in graded)
+        out.append(f"  {n_div}/{len(graded)} decisions diverged; summed "
+                   f"per-decision regret {total:.4f}s")
+    if reg.serving is not None:
+        s = reg.serving
+        out.append(f"\n-- serving grow/wait sequence (beam bound, "
+                   f"width {s.beam_width}) --")
+        out.append(f"  audited trade cost {s.audited_cost:.4f}, lower "
+                   f"bound {s.bound:.4f} -> regret {s.regret:.4f} over "
+                   f"{s.n_decisions} decisions")
+    return "\n".join(out)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
@@ -123,6 +180,13 @@ def main(argv: list[str] | None = None) -> int:
                     help="reconfig windows to list (default 5)")
     ap.add_argument("--chrome", metavar="OUT.json", default=None,
                     help="also write the Chrome trace_event export")
+    ap.add_argument("--regret", action="store_true",
+                    help="replay the trace against the offline oracle "
+                         "and print the regret report")
+    ap.add_argument("--node-budget", type=int, default=None,
+                    help="DP node budget for --regret (default: oracle's)")
+    ap.add_argument("--attribution-limit", type=int, default=None,
+                    help="grade at most N audited decisions (--regret)")
     args = ap.parse_args(argv)
     try:
         header, records = read_jsonl(args.trace)
@@ -130,6 +194,10 @@ def main(argv: list[str] | None = None) -> int:
         print(f"refusing to summarize: {exc}", file=sys.stderr)
         return 2
     print(render(header, records, top_k=args.top_k))
+    if args.regret:
+        print(render_regret(args.trace, node_budget=args.node_budget,
+                            attribution_limit=args.attribution_limit,
+                            top_k=args.top_k))
     if args.chrome:
         write_chrome_trace(args.chrome, records, header.get("meta"))
         print(f"\nchrome trace_event export -> {args.chrome} "

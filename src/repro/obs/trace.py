@@ -119,6 +119,13 @@ class Tracer:
         """A planner decision audit (shape: audit.plan_audit_record)."""
         self._emit(record)
 
+    def emit(self, record: dict[str, Any]) -> None:
+        """An arbitrary pre-shaped record (must carry a ``"type"`` key) —
+        the hook for typed records beyond the four built-ins, e.g. the
+        event kernel's per-job workload specs that make a trace a
+        self-contained replay substrate for the regret oracle."""
+        self._emit(record)
+
     def finish(self, t_end: float) -> None:
         """Stamp the run's end time into the trace metadata."""
         self.meta["t_end"] = t_end

@@ -1,0 +1,332 @@
+"""Regret oracle (core.planner.oracle) + replay loader (obs.replay):
+hand-checked DP optima, admissible-bound properties, end-to-end regret on
+a real traced run, the audit round-trip property on both MIG tables, and
+the audit/commit-path fixes the oracle replays through."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mig_a100 import make_backend as make_a100
+from repro.core.mig_h100 import make_backend as make_h100
+from repro.core.partition_manager import PartitionManager
+from repro.core.planner import (SCHEME_B_COST, CostTerms, PartitionPlanner,
+                                place_request)
+from repro.core.planner.oracle import (BatchOracle, OracleClass,
+                                       admissible_lower_bound_s,
+                                       classes_from_jobs,
+                                       classes_from_specs,
+                                       energy_lower_bound_j,
+                                       grow_wait_sequence_bound,
+                                       solve_batch_oracle)
+from repro.core.scheduler.energy import A100_POWER
+from repro.core.scheduler.job import rodinia_job
+from repro.core.scheduler.policies import run_scheme_b
+from repro.obs import Tracer
+from repro.obs.audit import (decode_handle, decode_state,
+                             deciding_tier_from_costs)
+from repro.obs.replay import decision_points, load_replay, trace_regret
+
+
+def _jobs(name, n):
+    return [rodinia_job(name, i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# exact DP: hand-checked optima
+
+
+class TestBatchOracleExact:
+    def test_three_euler3d_optimum_is_14_6(self):
+        # euler3d (18GB) fits 3g.20gb (7.6s), 4g.20gb (7.3s), 7g (7.3s).
+        # Best plan: 4g+3g concurrently, third job starts on the 4g slice
+        # the moment it frees -> makespan 7.3 + 7.3 = 14.6, beating two
+        # rounds of paired 3g slices (15.2).
+        result = solve_batch_oracle(make_a100(), _jobs("euler3d", 3))
+        assert result.exact
+        assert result.makespan_s == pytest.approx(14.6, abs=1e-5)
+
+    @pytest.mark.parametrize("n", [1, 7, 8, 20])
+    def test_homogeneous_closed_form(self, n):
+        # myocyte (1GB, demand 0.10) runs in 4.3s on every profile, so the
+        # optimum is pure slot counting: ceil(n/7) waves of seven 1g slices
+        result = solve_batch_oracle(make_a100(), _jobs("myocyte", n))
+        assert result.exact
+        assert result.makespan_s == pytest.approx(
+            4.3 * math.ceil(n / 7), abs=1e-5)
+
+    def test_optimum_at_least_closed_form_bound(self):
+        result = solve_batch_oracle(make_a100(), _jobs("euler3d", 5))
+        assert result.exact
+        assert result.makespan_s >= result.bound_s - 1e-9
+
+    def test_budget_falls_back_to_admissible_bound(self):
+        backend = make_a100()
+        jobs = _jobs("gaussian", 4) + _jobs("srad", 3) + _jobs("myocyte", 4)
+        exact = solve_batch_oracle(backend, jobs)
+        tiny = BatchOracle(backend, classes_from_jobs(jobs),
+                           node_budget=50).solve()
+        assert not tiny.exact
+        assert tiny.makespan_s == pytest.approx(tiny.bound_s)
+        if exact.exact:
+            assert tiny.makespan_s <= exact.makespan_s + 1e-9
+
+    def test_infeasible_job_raises(self):
+        huge = OracleClass(key=(), names=("whale",), count=1, peak_gb=400.0,
+                           t_fixed=0.5, t_kernel_s=1.0, t_io_s=0.0,
+                           demand=0.5)
+        with pytest.raises(ValueError, match="fit no profile"):
+            BatchOracle(make_a100(), [huge])
+
+    def test_classes_from_specs_matches_jobs(self):
+        jobs = _jobs("myocyte", 3) + _jobs("gaussian", 2)
+        specs = [{"name": j.name, "mem_gb": j.mem_gb, "t_fixed": j.t_fixed,
+                  "t_kernel_s": j.t_kernel, "t_io_s": j.t_io,
+                  "compute_demand": j.compute_demand} for j in jobs]
+        a = classes_from_jobs(jobs)
+        b = classes_from_specs(specs)
+        assert [(c.key, c.count) for c in a] == [(c.key, c.count) for c in b]
+
+
+# ---------------------------------------------------------------------------
+# admissible bounds
+
+
+class TestBounds:
+    @settings(max_examples=15)
+    @given(st.lists(st.tuples(
+        st.sampled_from(["myocyte", "gaussian", "srad", "particlefilter"]),
+        st.integers(min_value=1, max_value=4)), min_size=1, max_size=3))
+    def test_bound_never_exceeds_exact_optimum(self, mix):
+        jobs = []
+        for name, count in mix:
+            jobs.extend(_jobs(name, count))
+        backend = make_a100()
+        classes = classes_from_jobs(jobs)
+        bound = admissible_lower_bound_s(backend, classes)
+        result = BatchOracle(backend, classes, node_budget=150_000).solve()
+        if result.exact:
+            assert bound <= result.makespan_s + 1e-9
+
+    def test_fleet_bound_divides_area_not_critical_path(self):
+        classes = classes_from_jobs(_jobs("myocyte", 70))
+        backend = make_a100()
+        one = admissible_lower_bound_s(backend, classes)
+        two = admissible_lower_bound_s(backend, classes, n_devices=2)
+        assert two == pytest.approx(one / 2)     # area-dominated
+        solo = classes_from_jobs(_jobs("cfd_full", 1))
+        assert admissible_lower_bound_s(backend, solo, n_devices=4) == \
+            pytest.approx(admissible_lower_bound_s(backend, solo))
+
+    def test_energy_bound_scales_with_work_and_floor(self):
+        classes = classes_from_jobs(_jobs("myocyte", 10))
+        e1 = energy_lower_bound_j(A100_POWER, classes, 10.0)
+        e2 = energy_lower_bound_j(A100_POWER, classes, 20.0)
+        assert e2 - e1 == pytest.approx(A100_POWER.p_idle_w * 10.0)
+        dyn = 10 * 0.10 * 0.4 * (A100_POWER.p_peak_w - A100_POWER.p_idle_w)
+        assert e1 == pytest.approx(A100_POWER.p_idle_w * 10.0 + dyn)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: traced run -> replay -> regret
+
+
+class TestTraceRegret:
+    @pytest.fixture(scope="class")
+    def traced(self, tmp_path_factory):
+        path = str(tmp_path_factory.mktemp("regret") / "trace.jsonl")
+        tracer = Tracer(meta={"policy": "scheme_b"})
+        metrics = run_scheme_b(_jobs("myocyte", 10), make_a100(),
+                               A100_POWER, tracer=tracer)
+        tracer.write_jsonl(path)
+        return path, metrics
+
+    def test_makespan_regret_non_negative(self, traced):
+        path, metrics = traced
+        reg = trace_regret(load_replay(path))
+        assert reg.oracle is not None and reg.oracle.exact
+        assert reg.makespan_s == pytest.approx(metrics.makespan)
+        assert reg.makespan_regret_s >= -1e-6
+
+    def test_every_graded_decision_regret_non_negative(self, traced):
+        path, _ = traced
+        reg = trace_regret(load_replay(path))
+        graded = [d for d in reg.decisions if d.regret_s is not None]
+        assert graded, "no decision graded on a tiny exact mix"
+        for d in graded:
+            assert d.regret_s >= -1e-9
+
+    def test_replay_reconstructs_job_specs(self, traced):
+        path, _ = traced
+        replay = load_replay(path)
+        assert len(replay.jobs) == 10
+        assert replay.backend_name() == "MigA100Backend"
+        classes = classes_from_specs(replay.jobs)
+        assert sum(c.count for c in classes) == 10
+
+    def test_decision_points_causal(self, traced):
+        path, _ = traced
+        replay = load_replay(path)
+        points = decision_points(replay)
+        assert points
+        for dp in points:
+            running_names = {r.job for r in dp.running}
+            assert not running_names & set(dp.pending)
+            # every open run's handle is in the decoded audit state
+            for r in dp.running:
+                assert r.handle in dp.state
+
+
+# ---------------------------------------------------------------------------
+# audit round-trip property: random FSM walk, A100 + H100
+
+
+class TestAuditRoundTrip:
+    @settings(max_examples=10)
+    @given(st.sampled_from(["a100", "h100"]),
+           st.lists(st.tuples(st.floats(min_value=0.5, max_value=40.0),
+                              st.booleans()),
+                    min_size=1, max_size=12))
+    def test_plan_audit_jsonl_round_trip(self, device, walk):
+        backend = make_a100() if device == "a100" else make_h100()
+        pm = PartitionManager(backend)
+        planner = PartitionPlanner(pm, SCHEME_B_COST)
+        tracer = Tracer()
+        planner.tracer = tracer
+        planner.owner = "dev0"
+        live = []          # (state, plan) captured at each step
+        held = []
+        for need_gb, do_free in walk:
+            if do_free and held:
+                done = held.pop(0)
+                done.busy = False
+                pm.release(done)
+            plan = planner.plan(place_request(
+                backend, min(need_gb, backend.total_mem_gb()), 0.5, 1.0))
+            live.append((pm.state, plan))
+            result = planner.execute(plan)
+            if result is not None and result.partition is not None:
+                result.partition.busy = True   # as the kernel would
+                held.append(result.partition)
+
+        recs = [r for r in tracer.records if r.get("type") == "audit"]
+        assert len(recs) == len(live)
+        for rec, (state, plan) in zip(recs, live):
+            assert decode_state(rec["state"]) == state
+            assert rec["backend"] == type(backend).__name__
+            assert len(rec["candidates"]) == len(plan.candidates)
+            chosen = rec["chosen"]
+            if plan.chosen is None:
+                assert chosen is None
+            else:
+                assert plan.candidates[chosen] is plan.chosen
+                cand = rec["candidates"][chosen]
+                assert rec["action"] == plan.action.describe()
+                placement = getattr(plan.chosen.action, "placement", None)
+                if placement is not None:
+                    assert decode_handle(cand["handle"]) == placement.handle
+                    assert cand["profile"] == placement.profile.name
+
+
+# ---------------------------------------------------------------------------
+# serving grow/wait beam bound
+
+
+class TestGrowWaitBound:
+    def _audit(self, cost0, profile, kind="allocate", release=None):
+        return {"type": "audit", "model": "serving_grow",
+                "release": release, "chosen": 0,
+                "candidates": [{"kind": kind, "profile": profile,
+                                "cost": [cost0, 0.0]}]}
+
+    def test_bound_between_zero_and_audited(self):
+        audits = [self._audit(2.0, "2g.10gb", release="1g.5gb"),
+                  self._audit(3.0, "3g.20gb", release="2g.10gb"),
+                  self._audit(1.0, None, kind="wait", release="3g.20gb")]
+        b = grow_wait_sequence_bound(audits)
+        assert b is not None
+        assert b.n_decisions == 3
+        assert 0.0 <= b.bound <= b.audited_cost
+        assert b.regret >= 0.0
+        assert b.audited_cost == pytest.approx(6.0)
+
+    def test_no_serving_audits_returns_none(self):
+        assert grow_wait_sequence_bound(
+            [{"type": "audit", "model": "scheme_b"}]) is None
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes the oracle replays through
+
+
+class TestDecidingTierSchema:
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError, match="cost-tuple length mismatch"):
+            deciding_tier_from_costs((1.0, 2.0), (1.0, 2.0, 3.0))
+
+    def test_equal_length_still_works(self):
+        assert deciding_tier_from_costs((1.0, 2.0), (1.0, 3.0)) == 1
+        assert deciding_tier_from_costs((1.0, 2.0), (1.0, 2.0)) is None
+
+
+class TestNonFiniteCostValidation:
+    @settings(max_examples=20)
+    @given(st.sampled_from([f.name for f in dataclasses.fields(CostTerms)]),
+           st.sampled_from([float("nan"), float("inf"), float("-inf")]))
+    def test_cost_raises_naming_offending_feature(self, field, bad):
+        # only features SCHEME_B_COST actually weighs can poison its
+        # tuple; others must keep evaluating cleanly
+        terms = CostTerms(**{field: bad})
+        weighed = {f for tier in SCHEME_B_COST.weights
+                   for f in ([tier[0]] if isinstance(tier[0], str)
+                             else [name for name, _ in tier])}
+        if field in weighed:
+            with pytest.raises(ValueError) as exc:
+                SCHEME_B_COST.cost(terms)
+            assert field in str(exc.value)
+            assert "order-dependent" in str(exc.value)
+        else:
+            cost = SCHEME_B_COST.cost(terms)
+            assert all(math.isfinite(v) for v in cost)
+
+    def test_finite_terms_unchanged(self):
+        cost = SCHEME_B_COST.cost(CostTerms(reconfig_s=1.0, reach=5.0))
+        assert all(math.isfinite(v) for v in cost)
+
+    def test_chain_score_rejects_non_finite_profile(self):
+        import types
+
+        from repro.core.partition_state import PartitionProfile
+        from repro.core.planner.lookahead import _chain_score
+        pm = PartitionManager(make_a100())
+        bad = PartitionProfile("bad.nan", 5.0, float("nan"))
+        chain = (types.SimpleNamespace(profile=bad),)
+        with pytest.raises(ValueError, match="bad.nan"):
+            _chain_score(pm, chain, pm.state)
+
+
+class TestCommitPlacement:
+    def test_public_commit_matches_allocate_accounting(self):
+        backend = make_a100()
+        pm = PartitionManager(backend)
+        placement = backend.enumerate_placements(
+            pm.state, backend.profiles[0])[0]
+        part = pm.commit_placement(placement)
+        assert part.handle == placement.handle
+        assert part.handle in pm.state
+        assert pm.n_reconfigs == 1
+
+    def test_carve_homogeneous_goes_through_public_api(self):
+        from repro.core.planner import carve_homogeneous
+        backend = make_a100()
+        pm = PartitionManager(backend)
+        # the carve is maximal: the A100 fits seven 1g.5gb slices
+        parts = carve_homogeneous(pm, [backend.profiles[0]])
+        assert len(parts) == 7
+        assert pm.n_reconfigs == 7
+        assert {p.handle for p in parts} <= pm.state
